@@ -1,0 +1,167 @@
+"""Benchmarks mirroring the paper's figures/tables (§5).
+
+Each function returns rows of dicts and a CSV-ish summary; run.py drives all
+of them and tees artifacts/bench_results.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.schemes_des import OPS, erda_read_during_cleaning, \
+    erda_write_during_cleaning, make_sim
+from repro.core import make_store
+from repro.core.layout import HEADER_SIZE, KEY_BYTES
+from repro.netsim import SimParams
+from repro.netsim.sim import ClosedLoopClient
+from repro.workloads import WORKLOADS
+
+VALUE_SIZES = [16, 64, 256, 1024, 4096]
+THREADS = [1, 2, 4, 8, 16]
+SCHEMES = ("erda", "redo", "raw")
+
+
+def _run_closed_loop(scheme: str, workload: str, vsize: int, n_threads: int,
+                     horizon: float = 0.3, p: SimParams | None = None,
+                     cleaning: bool = False):
+    p = p or SimParams()
+    sim, cpu, verbs = make_sim(p)
+    read_frac = WORKLOADS[workload].read_fraction
+    rng = np.random.default_rng(hash((scheme, workload, vsize, n_threads)) & 0xFFFF)
+
+    if cleaning and scheme == "erda":
+        read_op = lambda: erda_read_during_cleaning(verbs, p, vsize)
+        write_op = lambda: erda_write_during_cleaning(verbs, p, vsize)
+        # the cleaner itself consumes CPU in the background
+        def cleaner_load():
+            if sim.now < horizon:
+                verbs.cpu_async(20e-6)
+                sim.after(50e-6, cleaner_load)
+        cleaner_load()
+    else:
+        read_op = lambda: OPS[scheme]["read"](verbs, p, vsize)
+        write_op = lambda: OPS[scheme]["write"](verbs, p, vsize)
+
+    def op_factory():
+        return read_op() if rng.random() < read_frac else write_op()
+
+    clients = [ClosedLoopClient(sim, op_factory, horizon) for _ in range(n_threads)]
+    for c in clients:
+        c.start()
+    sim.run(until=horizon)
+    lat = [l for c in clients for l in c.latencies]
+    completed = sum(c.completed for c in clients)
+    return {
+        "throughput_kops": completed / horizon / 1e3,
+        "mean_latency_us": float(np.mean(lat)) * 1e6 if lat else float("nan"),
+        "cpu_busy_s": cpu.busy_seconds,
+        "completed": completed,
+    }
+
+
+# ------------------------------------------------------- Figs 14-17: latency
+def bench_latency() -> List[Dict]:
+    rows = []
+    for wl in ("ycsb_c", "ycsb_b", "ycsb_a", "update_only"):
+        for scheme in SCHEMES:
+            per_size = {}
+            for v in VALUE_SIZES:
+                r = _run_closed_loop(scheme, wl, v, n_threads=1)
+                per_size[v] = r["mean_latency_us"]
+            rows.append({"figure": "latency(14-17)", "workload": wl,
+                         "scheme": scheme, **{f"v{v}": round(per_size[v], 2)
+                                              for v in VALUE_SIZES},
+                         "avg_us": round(float(np.mean(list(per_size.values()))), 2)})
+    return rows
+
+
+# --------------------------------------------------- Figs 18-21: throughput
+def bench_throughput() -> List[Dict]:
+    rows = []
+    for wl in ("ycsb_c", "ycsb_b", "ycsb_a", "update_only"):
+        for scheme in SCHEMES:
+            per_t = {}
+            for t in THREADS:
+                r = _run_closed_loop(scheme, wl, 1024, n_threads=t)
+                per_t[t] = r["throughput_kops"]
+            rows.append({"figure": "throughput(18-21)", "workload": wl,
+                         "scheme": scheme, **{f"t{t}": round(per_t[t], 1)
+                                              for t in THREADS},
+                         "avg_kops": round(float(np.mean(list(per_t.values()))), 2)})
+    return rows
+
+
+# ----------------------------------------------------- Figs 22-25: CPU cost
+def bench_cpu_cost() -> List[Dict]:
+    rows = []
+    for vsize in (16, 64, 256, 1024):
+        base = {}
+        for scheme in SCHEMES:
+            busy = 0.0
+            ops = 0
+            for wl in ("ycsb_c", "ycsb_b", "ycsb_a", "update_only"):
+                r = _run_closed_loop(scheme, wl, vsize, n_threads=8)
+                base[(scheme, wl)] = (r["cpu_busy_s"], r["completed"])
+        for wl in ("ycsb_c", "ycsb_b", "ycsb_a", "update_only"):
+            eb, eo = base[("erda", wl)]
+            erda_per_op = eb / max(eo, 1)
+            row = {"figure": "cpu_cost(22-25)", "value_size": vsize, "workload": wl}
+            for scheme in ("redo", "raw"):
+                sb, so = base[(scheme, wl)]
+                per_op = sb / max(so, 1)
+                row[scheme] = (round(per_op / erda_per_op, 2)
+                               if erda_per_op > 1e-12 else float("inf"))
+            rows.append(row)
+    return rows
+
+
+# ------------------------------------------------------- Fig 26: log cleaning
+def bench_cleaning() -> List[Dict]:
+    rows = []
+    for wl in ("ycsb_c", "ycsb_b", "ycsb_a", "update_only"):
+        normal = _run_closed_loop("erda", wl, 1024, n_threads=4)
+        during = _run_closed_loop("erda", wl, 1024, n_threads=4, cleaning=True)
+        rows.append({"figure": "cleaning(26)", "workload": wl,
+                     "normal_us": round(normal["mean_latency_us"], 2),
+                     "during_cleaning_us": round(during["mean_latency_us"], 2)})
+    return rows
+
+
+# ------------------------------------------------------ Table 1: NVM writes
+def bench_nvm_writes() -> List[Dict]:
+    rows = []
+    for vsize in (64, 1024):
+        N = KEY_BYTES + vsize
+        measured = {}
+        for scheme in SCHEMES:
+            s = make_store(scheme)
+            b0 = s.dev.stats.snapshot()
+            s.write(1, b"c" * vsize)
+            create = s.dev.stats.delta(b0).bytes_written
+            b0 = s.dev.stats.snapshot()
+            s.write(1, b"u" * vsize)
+            update = s.dev.stats.delta(b0).bytes_written
+            b0 = s.dev.stats.snapshot()
+            s.delete(1)
+            delete = s.dev.stats.delta(b0).bytes_written
+            measured[scheme] = (create, update, delete)
+        paper = {
+            "erda": (KEY_BYTES + 10 + N, 9 + N, KEY_BYTES + 9),
+            "redo": (KEY_BYTES + 12 + 2 * N, 4 + 2 * N, KEY_BYTES + 8),
+            "raw": (KEY_BYTES + 12 + 2 * N, 4 + 2 * N, KEY_BYTES + 8),
+        }
+        for scheme in SCHEMES:
+            rows.append({"figure": "nvm_writes(T1)", "value_size": vsize,
+                         "scheme": scheme,
+                         "create": measured[scheme][0], "update": measured[scheme][1],
+                         "delete": measured[scheme][2],
+                         "paper_create": paper[scheme][0],
+                         "paper_update": paper[scheme][1],
+                         "paper_delete": paper[scheme][2]})
+        rows.append({"figure": "nvm_writes(T1)", "value_size": vsize,
+                     "scheme": "erda/redo update ratio",
+                     "update": round(measured["erda"][1] / measured["redo"][1], 3),
+                     "paper_update": round(paper["erda"][1] / paper["redo"][1], 3)})
+    return rows

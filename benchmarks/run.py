@@ -1,0 +1,97 @@
+"""Benchmark driver — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows and tees full results to
+artifacts/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks.figures import (bench_cleaning, bench_cpu_cost,
+                                    bench_latency, bench_nvm_writes,
+                                    bench_throughput)
+    from benchmarks.kernels_bench import bench_kernels
+
+    all_rows = []
+    print("name,us_per_call,derived")
+
+    rows = bench_latency()
+    all_rows += rows
+    for r in rows:
+        print(f"latency/{r['workload']}/{r['scheme']},{r['avg_us']},"
+              f"v16={r['v16']}us v4096={r['v4096']}us")
+
+    rows = bench_throughput()
+    all_rows += rows
+    for r in rows:
+        us = 1e3 / r["avg_kops"] if r["avg_kops"] else float("nan")
+        print(f"throughput/{r['workload']}/{r['scheme']},{us:.2f},"
+              f"avg={r['avg_kops']}KOp/s t16={r['t16']}KOp/s")
+
+    rows = bench_cpu_cost()
+    all_rows += rows
+    for r in rows:
+        print(f"cpu_cost/v{r['value_size']}/{r['workload']},,"
+              f"redo={r['redo']}x raw={r['raw']}x")
+
+    rows = bench_cleaning()
+    all_rows += rows
+    for r in rows:
+        print(f"cleaning/{r['workload']},{r['during_cleaning_us']},"
+              f"normal={r['normal_us']}us")
+
+    rows = bench_nvm_writes()
+    all_rows += rows
+    for r in rows:
+        if "create" in r:
+            print(f"nvm_writes/v{r['value_size']}/{r['scheme']},,"
+                  f"create={r['create']}B update={r['update']}B delete={r['delete']}B")
+
+    rows = bench_kernels()
+    all_rows += rows
+    for r in rows:
+        print(f"kernel/{r['name'].replace(' ', '_')},{r['pallas_us']},"
+              f"ref={r['ref_us']}us")
+
+    from benchmarks.checkpoint_bench import bench_checkpoint
+    rows = bench_checkpoint()
+    all_rows += rows
+    for r in rows:
+        print(f"checkpoint/{r['name'].replace(' ', '_')},,"
+              f"erda_wamp={r['write_amplification_erda']} "
+              f"redo_wamp={r['write_amplification_redo']} ratio={r['ratio']}")
+
+    if not args.skip_roofline:
+        from benchmarks.roofline_report import summarize
+        try:
+            rows = summarize()
+            all_rows += rows
+            for r in rows[:80]:
+                extra = (f"frac={r['roofline_frac']}" if "roofline_frac" in r
+                         else r.get("note", ""))
+                print(f"roofline/{r['cell']},,dominant={r['dominant']} {extra}")
+        except Exception as e:  # sweep not run yet
+            print(f"roofline,,skipped ({e})")
+
+    out = pathlib.Path("artifacts")
+    out.mkdir(exist_ok=True)
+    (out / "bench_results.json").write_text(json.dumps(all_rows, indent=1,
+                                                       default=str))
+    print(f"# wrote {len(all_rows)} rows to artifacts/bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""DES op models for the three schemes (paper §5.1 'Comparisons').
+
+Each op is a generator over netsim verbs; latency and server-CPU seconds come
+out of the simulator, calibrated against the paper's measured averages (see
+EXPERIMENTS.md §Paper-validation for the side-by-side numbers).
+"""
+from __future__ import annotations
+
+from repro.core.layout import HEADER_SIZE, KEY_BYTES
+from repro.core.hashtable import ENTRY_SIZE, H
+from repro.netsim import Resource, SimParams, Simulator, Verbs
+
+NEIGHBORHOOD = H * ENTRY_SIZE  # one-sided metadata read size
+
+
+def record_size(vsize: int) -> int:
+    return HEADER_SIZE + KEY_BYTES + vsize
+
+
+# ------------------------------------------------------------------------ erda
+def erda_read(verbs: Verbs, p: SimParams, vsize: int):
+    yield from verbs.one_sided_read(NEIGHBORHOOD)       # hash-table entry
+    yield from verbs.one_sided_read(record_size(vsize))  # the object
+    yield ("delay", p.crc_s(record_size(vsize)))         # client-side verify
+
+
+def erda_write(verbs: Verbs, p: SimParams, vsize: int):
+    # write_with_imm: server allocates + one 8-byte atomic metadata flip
+    yield from verbs.send_recv(p.t_cpu_erda_alloc_s)
+    # one-sided zero-copy data write to the final log address
+    yield from verbs.one_sided_write(record_size(vsize))
+    yield ("delay", verbs.nvm_write_s(record_size(vsize)))
+
+
+def erda_read_during_cleaning(verbs: Verbs, p: SimParams, vsize: int):
+    # §4.4: clients switch to RDMA send; the server resolves offsets
+    yield from verbs.send_recv(p.t_cpu_read_base_s + p.memcpy_s(vsize))
+
+
+def erda_write_during_cleaning(verbs: Verbs, p: SimParams, vsize: int):
+    yield from verbs.send_recv(p.t_cpu_erda_alloc_s + p.memcpy_s(vsize))
+    yield ("delay", verbs.nvm_write_s(record_size(vsize)))
+
+
+# ------------------------------------------------------------------ baselines
+def baseline_read(verbs: Verbs, p: SimParams, vsize: int):
+    # send → server checks redo log / ring, reads destination, replies
+    yield from verbs.send_recv(p.t_cpu_read_base_s + p.memcpy_s(vsize),
+                               resp_bytes=vsize)
+
+
+def redo_write(verbs: Verbs, p: SimParams, vsize: int):
+    n = KEY_BYTES + vsize
+    # send the record; server CRC-verifies + appends to the redo log
+    yield from verbs.send_recv(p.t_cpu_redo_append_s + p.crc_s(n)
+                               + verbs.nvm_write_s(4 + n), req_bytes=n)
+    # async apply to the destination (second NVM write) — CPU load, not latency
+    verbs.cpu_async(p.t_cpu_apply_s + verbs.nvm_write_s(n))
+
+
+def raw_write(verbs: Verbs, p: SimParams, vsize: int):
+    n = KEY_BYTES + vsize
+    yield from verbs.send_recv(p.t_cpu_raw_alloc_s)      # obtain ring slot
+    yield from verbs.one_sided_write(4 + n)              # push into ring
+    yield from verbs.one_sided_read(4 + n)               # READ AFTER WRITE
+    verbs.cpu_async(p.t_cpu_apply_s + verbs.nvm_write_s(n))  # poll + apply
+
+
+OPS = {
+    "erda": {"read": erda_read, "write": erda_write},
+    "redo": {"read": baseline_read, "write": redo_write},
+    "raw": {"read": baseline_read, "write": raw_write},
+}
+
+
+def make_sim(p: SimParams):
+    sim = Simulator()
+    cpu = Resource(sim, p.server_cores, "server_cpu")
+    from repro.nvmsim import NVMDevice
+    verbs = Verbs(sim, p, cpu, NVMDevice(1 << 20))
+    return sim, cpu, verbs

@@ -1,0 +1,53 @@
+"""The paper's §4.2 failure scenarios, end to end, at checkpoint scale:
+
+  1. a checkpoint writer dies mid-shard  → committed checkpoint unaffected
+  2. the manifest data write itself tears → old manifest version served
+  3. the server crashes with torn objects → recovery scan repairs metadata
+  4. training resumes from the last consistent checkpoint
+
+    PYTHONPATH=src python examples/failure_recovery_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ErdaCheckpointManager
+from repro.launch.train import train
+
+mgr = ErdaCheckpointManager()
+
+print("=== train 8 steps, checkpoint every 4 ===")
+state, losses, _ = train(arch="olmo_1b", scale="smoke", steps=8, batch=2,
+                         seq=64, ckpt_every=4, ckpt_mgr=mgr, log_every=4)
+
+print("\n=== scenario 1: writer crash mid-checkpoint (step 12) ===")
+try:
+    mgr.save(12, state, fail_after_shards=3)
+except RuntimeError as e:
+    print(f"writer died: {e}")
+step, _ = mgr.restore(state)
+print(f"restore still serves committed step {step} (expected 8)")
+assert step == 8
+
+print("\n=== scenario 2: torn manifest write ===")
+import json
+from repro.nvmsim.device import TornWrite
+mgr.store.dev.fault.arm(countdown=0, fraction=0.3)
+try:
+    mgr.store.write(0x3A5F00D, json.dumps({"step": 99, "entries": []}).encode())
+except TornWrite:
+    print("manifest write torn at the NIC cache")
+step, _ = mgr.restore(state)
+print(f"CRC fallback serves step {step} (expected 8)")
+assert step == 8
+
+print("\n=== scenario 3: server crash + recovery scan ===")
+stats = mgr.crash_recover()
+print(f"recovery: {stats}")
+step, restored = mgr.restore(state)
+assert step == 8
+
+print("\n=== scenario 4: resume training from the consistent checkpoint ===")
+_, losses2, _ = train(arch="olmo_1b", scale="smoke", steps=10, batch=2,
+                      seq=64, resume=True, ckpt_mgr=mgr, log_every=2)
+print(f"resumed and ran {len(losses2)} more steps — all invariants held")

@@ -1,0 +1,26 @@
+"""End-to-end driver: train a ~100M-param olmo-family LM for a few hundred
+steps on synthetic structured tokens, checkpointing into the Erda store and
+proving loss goes down.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+
+from repro.launch.train import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+args = ap.parse_args()
+
+state, losses, mgr = train(arch="olmo_1b", scale="100m", steps=args.steps,
+                           batch=args.batch, seq=args.seq, ckpt_every=100,
+                           log_every=20, lr=1e-3)
+first = sum(losses[:10]) / 10
+last = sum(losses[-10:]) / 10
+print(f"\nloss: first-10 avg {first:.3f} → last-10 avg {last:.3f}")
+assert last < first - 0.25, "loss should be clearly descending"
+print("(full convergence toward the ~2.1-nat bigram floor takes a few thousand")
+print(" steps; this CPU-budget run demonstrates the descent + Erda checkpoints)")
+print("checkpoints live in the Erda store; resume with launch.train --resume")

@@ -1,0 +1,4 @@
+from repro.checkpoint.erda_ckpt import ErdaCheckpointManager
+from repro.checkpoint.serialization import leaf_from_bytes, leaf_to_bytes
+
+__all__ = ["ErdaCheckpointManager", "leaf_from_bytes", "leaf_to_bytes"]

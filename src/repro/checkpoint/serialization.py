@@ -1,0 +1,29 @@
+"""Array leaf ↔ bytes with a self-describing header (dtype, shape)."""
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # bfloat16 & friends
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def leaf_to_bytes(arr) -> bytes:
+    a = np.asarray(arr)
+    meta = json.dumps({"dtype": a.dtype.name, "shape": list(a.shape)}).encode()
+    return struct.pack("<I", len(meta)) + meta + a.tobytes()
+
+
+def leaf_from_bytes(buf: bytes) -> np.ndarray:
+    (mlen,) = struct.unpack_from("<I", buf, 0)
+    meta = json.loads(buf[4 : 4 + mlen].decode())
+    data = buf[4 + mlen :]
+    return np.frombuffer(data, dtype=_resolve_dtype(meta["dtype"])).reshape(
+        meta["shape"]).copy()

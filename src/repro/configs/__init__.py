@@ -1,0 +1,5 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, SUBQUADRATIC, ModelConfig,
+                                ShapeConfig, all_cells, cell_applicable, get_config)
+
+__all__ = ["ARCH_IDS", "SHAPES", "SUBQUADRATIC", "ModelConfig", "ShapeConfig",
+           "all_cells", "cell_applicable", "get_config"]

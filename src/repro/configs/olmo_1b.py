@@ -1,0 +1,10 @@
+"""olmo-1b [dense]: 16L, d=2048, 16H MHA (kv=16), d_ff=8192, vocab 50304,
+non-parametric LayerNorm.  [arXiv:2402.00838]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo_1b", family="dense",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=8192, vocab_size=50_304,
+    norm="nonparam_ln",
+)

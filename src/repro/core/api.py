@@ -1,0 +1,48 @@
+"""Unified KV-store facade over Erda and the two baselines.
+
+All three expose read/write/delete plus NVM statistics, so benchmarks and
+property tests run the same op streams against every scheme.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.baselines.read_after_write import ReadAfterWriteStore
+from repro.core.baselines.redo_logging import RedoLoggingStore
+from repro.core.client import ErdaClient
+from repro.core.server import ErdaServer, ServerConfig
+
+
+class ErdaStore:
+    scheme = "erda"
+
+    def __init__(self, cfg: Optional[ServerConfig] = None):
+        self.server = ErdaServer(cfg or ServerConfig())
+        self.client = ErdaClient(self.server)
+        self.dev = self.server.dev
+
+    def write(self, key: int, value: bytes) -> None:
+        self.client.write(key, value)
+
+    def read(self, key: int) -> Optional[bytes]:
+        return self.client.read(key)
+
+    def delete(self, key: int) -> None:
+        self.client.delete(key)
+
+    @property
+    def stats(self):
+        return self.client.stats
+
+
+def make_store(scheme: str, **kwargs):
+    if scheme == "erda":
+        return ErdaStore(kwargs.get("cfg"))
+    if scheme == "redo":
+        return RedoLoggingStore(**kwargs)
+    if scheme == "raw":
+        return ReadAfterWriteStore(**kwargs)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+ALL_SCHEMES = ("erda", "redo", "raw")

@@ -1,0 +1,4 @@
+from repro.core.baselines.redo_logging import RedoLoggingStore
+from repro.core.baselines.read_after_write import ReadAfterWriteStore
+
+__all__ = ["RedoLoggingStore", "ReadAfterWriteStore"]

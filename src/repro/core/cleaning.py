@@ -1,0 +1,245 @@
+"""Lock-free log cleaning (paper §4.4, Figs 9-13).
+
+Two phases, concurrent with client reads/writes:
+
+  MERGE       — reverse scan of Region 1 from the tail at cleaning start;
+                first-encountered (= latest) version per key is copied to
+                Region 2 and the entry's OLD offset region is updated — the
+                new tag is NOT flipped.  Client ops switch to RDMA send;
+                client writes still append to Region 1 (NEW offset region
+                updated in place, no flip).  Deleted objects are dropped.
+  REPLICATION — records written to Region 1 after merge start are copied into
+                a replication area reserved at the Region-2 tail.  Client
+                writes now append to Region 2 *after* the reserved area and
+                update the OLD offset region.  The copy is skipped when the
+                entry's old offset already exceeds the reserved area's end —
+                a client wrote a newer version during replication (paper's
+                offset-comparison rule).
+  FINISH      — head pointer swings Region 1 → Region 2, every entry of the
+                head gets its new tag flipped (one atomic store each: the OLD
+                region, which now holds the Region-2 offset, becomes NEW),
+                entries whose latest version is a delete are removed, clients
+                are told cleaning is over.
+
+Crash safety: Region 1 and the un-flipped tags stay authoritative until
+FINISH, so a crash mid-cleaning simply discards Region 2 (stale old-offsets
+pointing into Region 2 are still valid full records of *previous* versions —
+exactly what the old slot is for).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core import layout
+from repro.core.log import Head, Region, RecordRef
+
+
+def _align8(n: int) -> int:
+    return (n + 7) & ~7
+
+
+class Cleaner:
+    def __init__(self, server, head: Head):
+        self.server = server
+        self.head = head
+        self.phase = "idle"
+        self.deleted_keys: Set[int] = set()
+
+    # ------------------------------------------------------------------ start
+    def start(self) -> None:
+        dev = self.server.dev
+        self.merge_start_len = len(self.head.index)
+        self.r2 = Region(dev.alloc(self.head.region_size, align=8), self.head.region_size)
+        self.r2_tail = self.r2.start
+        self.r2_index: List[RecordRef] = []
+        self.seen: Set[int] = set()
+        self.merge_pos = self.merge_start_len - 1
+        self.head.cleaning = True
+        self.phase = "merge"
+
+    def _r2_reserve(self, size: int) -> int:
+        addr = self.r2_tail
+        if addr + size > self.r2.end:
+            raise MemoryError("Region 2 exhausted during cleaning")
+        self.r2_tail += _align8(size)
+        return addr
+
+    # ------------------------------------------------------------------ driver
+    def step(self, budget: int = 64) -> bool:
+        """Process up to `budget` records; returns True while work remains."""
+        if self.phase == "merge":
+            self._step_merge(budget)
+            return True
+        if self.phase == "replicate":
+            return self._step_replicate(budget)
+        return False
+
+    def run_to_completion(self) -> None:
+        while self.step(1 << 30):
+            pass
+
+    # ------------------------------------------------------------------ merge
+    def _step_merge(self, budget: int) -> None:
+        table = self.server.table
+        dev = self.server.dev
+        while budget > 0 and self.merge_pos >= 0:
+            ref = self.head.index[self.merge_pos]
+            self.merge_pos -= 1
+            if ref.key in self.seen:
+                continue  # stale version — "simply overlooks it"
+            self.seen.add(ref.key)
+            budget -= 1
+            entry = table.lookup(ref.key)
+            if entry is None:
+                continue
+            if ref.deleted:
+                self.deleted_keys.add(ref.key)
+                continue  # deleted objects are removed by not copying them
+            rec = dev.read(ref.offset, ref.size)
+            addr = self._r2_reserve(ref.size)
+            dev.write(addr, rec)
+            self.r2_index.append(RecordRef(addr, ref.key, ref.size, False))
+            w = table.read_word(entry.slot)
+            tag, off_new, _off_old = layout.unpack_word(w)
+            table.write_word(entry.slot, layout.pack_word(tag, off_new, addr))
+        if self.merge_pos < 0:
+            self._begin_replication()
+
+    def _begin_replication(self) -> None:
+        self.repl_set = list(self.head.index[self.merge_start_len :])
+        reserved = sum(_align8(r.size) for r in self.repl_set)
+        self.repl_tail = self.r2_tail
+        self.repl_end = self.r2_tail + reserved
+        if self.repl_end > self.r2.end:
+            raise MemoryError("Region 2 exhausted reserving replication area")
+        self.client_tail = self.repl_end  # client writes land after the reserve
+        self.repl_pos = len(self.repl_set) - 1
+        self.repl_seen: Set[int] = set()
+        self.r2_tail = self.repl_end
+        self.phase = "replicate"
+
+    # ------------------------------------------------------------- replication
+    def _step_replicate(self, budget: int) -> bool:
+        table = self.server.table
+        dev = self.server.dev
+        while budget > 0 and self.repl_pos >= 0:
+            ref = self.repl_set[self.repl_pos]
+            self.repl_pos -= 1
+            if ref.key in self.repl_seen:
+                continue
+            self.repl_seen.add(ref.key)
+            budget -= 1
+            entry = table.lookup(ref.key)
+            if entry is None:
+                continue
+            w = table.read_word(entry.slot)
+            tag, off_new, off_old = layout.unpack_word(w)
+            if off_old != layout.NULL_OFF and off_old >= self.repl_end:
+                continue  # a client already wrote a newer version into Region 2
+            if ref.deleted:
+                self.deleted_keys.add(ref.key)
+                continue
+            self.deleted_keys.discard(ref.key)
+            rec = dev.read(ref.offset, ref.size)
+            addr = self.repl_tail
+            self.repl_tail += _align8(ref.size)
+            dev.write(addr, rec)
+            self.r2_index.append(RecordRef(addr, ref.key, ref.size, False))
+            table.write_word(entry.slot, layout.pack_word(tag, off_new, addr))
+        if self.repl_pos < 0:
+            self._finish()
+            return False
+        return True
+
+    # ------------------------------------------------------------------ client ops during cleaning
+    def client_write_addr(self, key: int, val_len: int, *, delete: bool = False) -> Tuple[int, int]:
+        """Server-mediated write while cleaning (clients switched to send)."""
+        table = self.server.table
+        size = layout.record_size(val_len, delete=delete)
+        if self.phase == "merge":
+            addr = self.head.reserve(size)  # still Region 1
+            entry = table.lookup(key)
+            if entry is None:
+                if delete:
+                    raise KeyError(f"delete of missing key {key}")
+                table.insert(key, self.head.head_id, addr)
+            else:
+                w = table.read_word(entry.slot)
+                tag, _off_new, off_old = layout.unpack_word(w)
+                # update NEW offset region in place; tag NOT flipped (§4.4)
+                table.write_word(entry.slot, layout.pack_word(tag, addr, off_old))
+            self.head.record_written(addr, key, size, delete)
+        else:  # replicate: append to Region 2 after the reserved area
+            addr = self.client_tail
+            if addr + size > self.r2.end:
+                raise MemoryError("Region 2 exhausted during cleaning")
+            self.client_tail += _align8(size)
+            entry = table.lookup(key)
+            if entry is None:
+                if delete:
+                    raise KeyError(f"delete of missing key {key}")
+                # create during replication: both regions point at the record so
+                # the finish-time flip leaves NEW valid (see DESIGN.md)
+                table.insert(key, self.head.head_id, addr)
+                e = table.lookup(key)
+                table.write_word(e.slot, layout.pack_word(1, addr, addr))
+            else:
+                w = table.read_word(entry.slot)
+                tag, off_new, _off_old = layout.unpack_word(w)
+                table.write_word(entry.slot, layout.pack_word(tag, off_new, addr))
+            self.r2_index.append(RecordRef(addr, key, size, delete))
+            if delete:
+                self.deleted_keys.add(key)
+            else:
+                self.deleted_keys.discard(key)
+        return addr, size
+
+    def client_read(self, key: int) -> Optional[bytes]:
+        table = self.server.table
+        dev = self.server.dev
+        entry = table.lookup(key)
+        if entry is None:
+            return None
+        w = table.read_word(entry.slot)
+        tag, off_new, off_old = layout.unpack_word(w)
+        if self.phase == "merge":
+            off = off_new  # "the server accesses the new offset region in Region 1"
+        else:
+            # offset-comparison rule (paper §4.4): old offset beyond the
+            # reserved replication area ⇒ written during replication ⇒ latest
+            if off_old != layout.NULL_OFF and off_old >= self.repl_end:
+                off = off_old
+            else:
+                off = off_new
+        if off == layout.NULL_OFF:
+            return None
+        rec = layout.parse_record(dev.mem, off)
+        if rec.ok and rec.key == key:
+            return None if rec.deleted else rec.value
+        # fall back to the other version
+        other = off_old if off == off_new else off_new
+        if other != layout.NULL_OFF:
+            rec = layout.parse_record(dev.mem, other)
+            if rec.ok and rec.key == key:
+                return None if rec.deleted else rec.value
+        return None
+
+    # ------------------------------------------------------------------ finish
+    def _finish(self) -> None:
+        table = self.server.table
+        # swing the head pointer Region 1 → Region 2
+        self.head.regions = [self.r2]
+        self.head.tail = self.client_tail
+        self.head.index = sorted(self.r2_index, key=lambda r: r.offset)
+        # flip the new tags of every entry belonging to this head (Fig 13)
+        for entry in list(table.iter_valid()):
+            if entry.head_id != self.head.head_id:
+                continue
+            if entry.key in self.deleted_keys:
+                table.remove(entry.slot)
+                continue
+            w = table.read_word(entry.slot)
+            table.write_word(entry.slot, w ^ (1 << 63))
+        self.head.cleaning = False
+        self.phase = "done"
+        self.server.cleaning_finished(self.head.head_id)

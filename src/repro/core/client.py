@@ -1,0 +1,159 @@
+"""ErdaClient — the client side of the protocol (paper Fig 7).
+
+Reads are TWO one-sided RDMA reads, zero server CPU:
+  1. read the hopscotch neighborhood of the key's home bucket (metadata),
+  2. read the object at the NEW offset from the 8-byte atomic word.
+The client verifies the object's CRC locally.  On failure it re-reads the OLD
+offset (already in hand — no extra metadata round-trip) and notifies the
+server to repair the entry.
+
+Writes are write_with_imm (server does the 8-byte atomic metadata flip and
+returns the tail address) + ONE one-sided data write.  No read-after-write, no
+redo log, no second NVM copy.
+
+In this functional model "one-sided" = the client touches ``server.dev``
+directly without calling server handlers; the DES layer accounts latency/CPU
+separately (benchmarks/schemes_des.py).
+"""
+from __future__ import annotations
+
+import struct
+from typing import Dict, Optional
+
+from repro.core import layout
+from repro.core.hashtable import ENTRY_SIZE, H, STATE_VALID
+from repro.core.server import DataLossError, ErdaServer
+from repro.nvmsim.device import TornWrite
+
+
+class ErdaClient:
+    INITIAL_READ = 4096  # speculative first object read when size unknown
+
+    def __init__(self, server: ErdaServer, client_id: int = 0):
+        self.server = server
+        self.client_id = client_id
+        self.size_cache: Dict[int, int] = {}
+        # connection establishment: server sends the head array (paper §3.3)
+        self.head_array = server.log.head_array()
+        self.stats = {"reads": 0, "writes": 0, "fallbacks": 0, "repairs": 0,
+                      "one_sided_reads": 0, "one_sided_writes": 0, "send_ops": 0}
+
+    # ------------------------------------------------------------- one-sided ops
+    def _os_read(self, addr: int, nbytes: int) -> bytes:
+        self.stats["one_sided_reads"] += 1
+        nbytes = min(nbytes, self.server.dev.size - addr)
+        return self.server.dev.read(addr, nbytes).tobytes()
+
+    def _os_write(self, addr: int, data: bytes) -> None:
+        self.stats["one_sided_writes"] += 1
+        self.server.dev.write(addr, data)
+
+    # ------------------------------------------------------------- metadata read
+    def _read_entry(self, key: int):
+        """One one-sided read of the neighborhood; client-side hopscotch scan."""
+        table = self.server.table
+        home = table.home(key)
+        base = table._addr(home)
+        # neighborhood may wrap the table end; model as a single read (the
+        # registered region is contiguous) of up to H entries
+        raw = b""
+        want = H * ENTRY_SIZE
+        first = min(want, table.base + table.capacity * ENTRY_SIZE - base)
+        raw = self._os_read(base, first)
+        if first < want:
+            raw += self._os_read(table.base, want - first)
+        for i in range(H):
+            chunk = raw[i * ENTRY_SIZE : (i + 1) * ENTRY_SIZE]
+            if len(chunk) < ENTRY_SIZE:
+                break
+            k = struct.unpack_from("<Q", chunk, 0)[0]
+            word = struct.unpack_from("<Q", chunk, 8)[0]
+            state = chunk[17]
+            if state == STATE_VALID and k == key:
+                return word
+        return None
+
+    # ------------------------------------------------------------- object read
+    def _read_object(self, key: int, off: int) -> layout.RecordView:
+        guess = self.size_cache.get(key, self.INITIAL_READ)
+        buf = self._os_read(off, guess)
+        rec = layout.parse_record(memoryview_to_np(buf), 0)
+        if not rec.ok:
+            # maybe the object is just longer than our speculative read: check
+            # the header's claimed size and re-read once (size-miss path)
+            if len(buf) >= layout.HEADER_SIZE:
+                flags, _crc, key_len, val_len = struct.unpack_from(layout.HEADER_FMT, buf, 0)
+                claimed = layout.HEADER_SIZE + key_len + (0 if flags & layout.FLAG_DELETE else val_len)
+                if claimed > len(buf) and claimed <= self.server.log.heads[0].segment_size:
+                    buf = self._os_read(off, claimed)
+                    rec = layout.parse_record(memoryview_to_np(buf), 0)
+        if rec.ok:
+            self.size_cache[key] = rec.size
+        return rec
+
+    def read(self, key: int) -> Optional[bytes]:
+        self.stats["reads"] += 1
+        if self.server.is_cleaning(key):
+            # during cleaning, ops for this head go through RDMA send (§4.4)
+            self.stats["send_ops"] += 1
+            return self.server.handle_read(key)
+        word = self._read_entry(key)
+        if word is None or word == 0:
+            return None
+        _tag, off_new, off_old = layout.unpack_word(word)
+        if off_new == layout.NULL_OFF:
+            return None
+        rec = self._read_object(key, off_new)
+        if rec.ok and rec.key == key:
+            return None if rec.deleted else rec.value
+        # --- fallback: torn/in-flight new version → old version (paper §4.2)
+        self.stats["fallbacks"] += 1
+        if off_old == layout.NULL_OFF:
+            # torn create; tell the server, the object does not exist yet
+            self.stats["repairs"] += 1
+            self.stats["send_ops"] += 1
+            self.server.handle_repair(key, word)
+            return None
+        rec_old = self._read_object(key, off_old)
+        if rec_old.ok and rec_old.key == key:
+            self.stats["repairs"] += 1
+            self.stats["send_ops"] += 1
+            self.server.handle_repair(key, word)
+            return None if rec_old.deleted else rec_old.value
+        raise DataLossError(f"both versions of key {key} unreadable")
+
+    # ------------------------------------------------------------- write path
+    def write(self, key: int, value: bytes) -> None:
+        self.stats["writes"] += 1
+        if self.server.is_cleaning(key):
+            self.stats["send_ops"] += 1
+            addr, size = self.server.handle_write_req(key, len(value))
+            # during cleaning the server performs the data write itself (send path)
+            self.server.dev.write(addr, layout.pack_record(key, value))
+            self._post_write(key, addr, size)
+            return
+        self.stats["send_ops"] += 1
+        addr, size = self.server.handle_write_req(key, len(value))  # write_with_imm
+        rec = layout.pack_record(key, value)
+        self._os_write(addr, rec)  # may raise TornWrite under fault injection
+        self.size_cache[key] = size
+        self._post_write(key, addr, size)
+
+    def delete(self, key: int) -> None:
+        self.stats["writes"] += 1
+        if self.server.is_cleaning(key):
+            self.stats["send_ops"] += 1
+            addr, size = self.server.handle_write_req(key, 0, delete=True)
+            self.server.dev.write(addr, layout.pack_record(key, None, delete=True))
+            return
+        self.stats["send_ops"] += 1
+        addr, size = self.server.handle_write_req(key, 0, delete=True)
+        self._os_write(addr, layout.pack_record(key, None, delete=True))
+
+    def _post_write(self, key: int, addr: int, size: int) -> None:
+        pass  # hook for tests/telemetry
+
+
+def memoryview_to_np(buf: bytes):
+    import numpy as np
+    return np.frombuffer(buf, dtype=np.uint8)

@@ -1,0 +1,82 @@
+"""Batch CRC32 (IEEE, reflected poly 0xEDB88320) as a Pallas TPU kernel.
+
+This is the paper's verification hot-spot moved to the TPU host: Erda clients
+and the recovery scan CRC-verify every fetched object/checkpoint shard
+(§4.2).  A CPU implements CRC byte-serially with slice-by-8 tables; a TPU has
+no byte-serial unit, so the kernel restructures the computation as a
+LANE-PARALLEL byte-table recurrence: each of the 8×128 vector lanes owns one
+object and walks its words, so throughput comes from verifying many objects at
+once (exactly the batch shape of checkpoint-restore and multi-get verify).
+
+Layout: data (N, W) uint32 little-endian words, one row per object (callers
+zero-pad to whole words; the CRC is over the padded buffer).  The 256-entry
+table lives in VMEM and is shared by every program.
+
+Validated in interpret mode against the pure-jnp oracle (ref.crc32_ref) and
+against zlib.crc32 ground truth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+CRC_POLY = 0xEDB88320
+
+
+def make_table() -> np.ndarray:
+    """Standard reflected CRC-32 byte table (matches zlib)."""
+    tab = np.zeros(256, dtype=np.uint32)
+    for i in range(256):
+        c = np.uint32(i)
+        for _ in range(8):
+            c = np.uint32((c >> np.uint32(1)) ^ (CRC_POLY * (c & np.uint32(1))))
+        tab[i] = c
+    return tab
+
+
+def _crc32_kernel(table_ref, data_ref, out_ref, *, n_words: int):
+    """One program: a (block_n,) slab of objects; walk W words × 4 bytes."""
+    table = table_ref[...]            # (256,) uint32 in VMEM
+    data = data_ref[...]              # (block_n, W) uint32
+
+    def word_step(w, crc):
+        word = data[:, w]
+
+        def byte_step(b, crc):
+            byte = (word >> (jnp.uint32(8) * b)) & jnp.uint32(0xFF)
+            idx = ((crc ^ byte) & jnp.uint32(0xFF)).astype(jnp.int32)
+            return (crc >> jnp.uint32(8)) ^ jnp.take(table, idx, axis=0)
+
+        return jax.lax.fori_loop(jnp.uint32(0), jnp.uint32(4), byte_step, crc)
+
+    init = jnp.full(data.shape[:1], 0xFFFFFFFF, jnp.uint32)
+    crc = jax.lax.fori_loop(0, n_words, word_step, init)
+    out_ref[...] = crc ^ jnp.uint32(0xFFFFFFFF)
+
+
+def crc32_pallas(data: jax.Array, *, block_n: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """data: (N, W) uint32 → (N,) uint32 CRCs.  block_n objects per program;
+    the (block_n, W) slab + 1 KiB table must fit VMEM (≈block_n·W·4 bytes)."""
+    n, w = data.shape
+    block_n = min(block_n, n)
+    while n % block_n:
+        block_n //= 2
+    block_n = max(block_n, 1)
+    table = jnp.asarray(make_table())
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_crc32_kernel, n_words=w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((256,), lambda i: (0,)),           # table: every block
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),   # object slab
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=interpret,
+    )(table, data)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crc32 import make_table
+
+
+def crc32_ref(data: jax.Array) -> jax.Array:
+    """Reference batch CRC32: same nibble-free byte-table recurrence in plain
+    jnp (no pallas), one row per object.  data: (N, W) uint32 → (N,) uint32."""
+    table = jnp.asarray(make_table())
+    n, w = data.shape
+
+    def word_step(crc, word):
+        def byte_step(crc, b):
+            byte = (word >> (jnp.uint32(8) * jnp.uint32(b))) & jnp.uint32(0xFF)
+            idx = ((crc ^ byte) & jnp.uint32(0xFF)).astype(jnp.int32)
+            return (crc >> jnp.uint32(8)) ^ jnp.take(table, idx), None
+
+        for b in range(4):
+            crc, _ = byte_step(crc, b)
+        return crc, None
+
+    init = jnp.full((n,), 0xFFFFFFFF, jnp.uint32)
+    crc, _ = jax.lax.scan(word_step, init, jnp.moveaxis(data, 1, 0))
+    return crc ^ jnp.uint32(0xFFFFFFFF)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """Dense softmax attention oracle.  q,k,v: (BH, S, hd)."""
+    s = q.shape[1]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.models.registry import get_model
+
+__all__ = ["get_model"]

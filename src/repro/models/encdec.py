@@ -1,0 +1,172 @@
+"""Whisper-style encoder-decoder.  The audio conv frontend is a STUB: the
+input is precomputed frame embeddings (B, encoder_seq, d) supplied by
+input_specs(); the backbone (12L encoder, 12L decoder with cross-attention)
+is real.  Positions: sinusoidal (encoder) / learned (decoder)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention as A
+from repro.models.layers import basic as B
+from repro.models.transformer import CACHE_PAD, _full_cache_from_kv
+from repro.sharding.rules import constrain_batch
+
+
+def _init_enc_layer(cfg, key):
+    ks = jax.random.split(key, 4)
+    return {"ln1": B.init_norm(cfg, ks[0]), "attn": A.init_attention(cfg, ks[1]),
+            "ln2": B.init_norm(cfg, ks[2]), "mlp": B.init_mlp(cfg, ks[3])}
+
+
+def _init_dec_layer(cfg, key):
+    ks = jax.random.split(key, 6)
+    return {"ln1": B.init_norm(cfg, ks[0]), "self_attn": A.init_attention(cfg, ks[1]),
+            "ln_x": B.init_norm(cfg, ks[2]), "cross_attn": A.init_attention(cfg, ks[3]),
+            "ln2": B.init_norm(cfg, ks[4]), "mlp": B.init_mlp(cfg, ks[5])}
+
+
+def init_lm(cfg, key, max_seq: int):
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": B.init_embedding(cfg, ks[2]),
+        "dec_pos": B.dense_init(ks[3], (max_seq, cfg.d_model), B.dtype_of(cfg), scale=0.01),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys),
+        "enc_norm": B.init_norm(cfg, ks[4]),
+        "final_norm": B.init_norm(cfg, jax.random.fold_in(key, 7)),
+    }
+
+
+def encode(cfg, params, frames):
+    x = constrain_batch(frames.astype(B.dtype_of(cfg)))
+    x = x + B.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(h, lp):
+        z = B.apply_norm(lp["ln1"], h, cfg.norm)
+        q, k, v = A.qkv(lp["attn"], z, cfg)
+        o = A.full_attention(q, k, v, causal=False).reshape(h.shape[0], h.shape[1], cfg.q_dim)
+        h = h + o @ lp["attn"]["wo"]
+        z = B.apply_norm(lp["ln2"], h, cfg.norm)
+        return h + B.apply_mlp(lp["mlp"], z, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = B.scan_layers(body_fn, x, params["enc_layers"], unroll=cfg.unroll)
+    return B.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def _dec_layer(cfg, lp, x, enc_out, positions, *, self_kv=None, cross_kv=None,
+               pos=None):
+    """One decoder layer; train mode when self_kv is None.
+    Returns (x, (k,v self), (k,v cross))."""
+    x = constrain_batch(x)
+    Bsz, S, _ = x.shape
+    z = B.apply_norm(lp["ln1"], x, cfg.norm)
+    if self_kv is None:  # full-sequence causal self-attention
+        q, k, v = A.qkv(lp["self_attn"], z, cfg)
+        if S <= 512:
+            o = A.full_attention(q, k, v, causal=True)
+        else:
+            o = A.chunked_attention(q, k, v, cfg, causal=True)
+        new_self = (k, v)
+    else:
+        q, k, v = A.qkv(lp["self_attn"], z, cfg)
+        kc, vc, kp = A.cache_update(self_kv["k"], self_kv["v"], self_kv["kv_pos"],
+                                    k, v, pos)
+        o = A.decode_attention(q, kc, vc, kp, pos)
+        new_self = {"k": kc, "v": vc, "kv_pos": kp}
+    x = x + o.reshape(Bsz, S, cfg.q_dim) @ lp["self_attn"]["wo"]
+
+    z = B.apply_norm(lp["ln_x"], x, cfg.norm)
+    if cross_kv is None:
+        q, ck, cv = A.qkv(lp["cross_attn"], z, cfg, kv_x=enc_out)
+    else:
+        q = (z @ lp["cross_attn"]["wq"]).reshape(Bsz, S, cfg.n_heads, cfg.head_dim)
+        ck, cv = cross_kv["k"], cross_kv["v"]
+    o = A.full_attention(q, ck, cv, causal=False)
+    x = x + o.reshape(Bsz, S, cfg.q_dim) @ lp["cross_attn"]["wo"]
+
+    z = B.apply_norm(lp["ln2"], x, cfg.norm)
+    x = x + B.apply_mlp(lp["mlp"], z, cfg)
+    return x, new_self, (ck, cv)
+
+
+def _decoder_inputs(cfg, params, tokens, offset=0):
+    x = B.embed(params["embed"], tokens)
+    S = tokens.shape[1]
+    pos_tab = jax.lax.dynamic_slice_in_dim(params["dec_pos"], offset, S, axis=0)
+    return x + pos_tab[None]
+
+
+def train_loss(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    x = _decoder_inputs(cfg, params, batch["tokens"])
+
+    def body(h, lp):
+        h, _, _ = _dec_layer(cfg, lp, h, enc_out, None)
+        return h, None
+
+    remat = cfg.remat == "full"
+    x, _ = B.scan_layers(jax.checkpoint(body) if remat else body, x,
+                         params["dec_layers"], unroll=cfg.unroll)
+    x = B.apply_norm(params["final_norm"], x, cfg.norm)
+    return B.lm_loss_chunked(params["embed"], x, batch["tokens"],
+                             chunk=cfg.loss_chunk, unroll=cfg.unroll)
+
+
+def prefill(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    x = _decoder_inputs(cfg, params, batch["tokens"])
+    S = x.shape[1]
+
+    def body(h, lp):
+        h, (k, v), (ck, cv) = _dec_layer(cfg, lp, h, enc_out, None)
+        return h, (k, v, ck, cv)
+
+    x, (k, v, ck, cv) = B.scan_layers(body, x, params["dec_layers"],
+                                      unroll=cfg.unroll)
+    x = B.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = B.unembed(params["embed"], x[:, -1:])
+    cache = {"pos": jnp.int32(S),
+             "self": jax.vmap(lambda kk, vv: _full_cache_from_kv(kk, vv, S))(k, v),
+             "cross": {"k": ck, "v": cv}}
+    return logits, cache
+
+
+def init_cache(cfg, batch_size: int, seq_len: int):
+    dt = B.dtype_of(cfg)
+    KV, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    C = seq_len + CACHE_PAD
+    Se = cfg.encoder_seq
+    return {
+        "pos": jnp.int32(seq_len),
+        "self": {"k": jnp.zeros((L, batch_size, C, KV, hd), dt),
+                 "v": jnp.zeros((L, batch_size, C, KV, hd), dt),
+                 "kv_pos": jnp.full((L, C), -1, jnp.int32)},
+        "cross": {"k": jnp.zeros((L, batch_size, Se, KV, hd), dt),
+                  "v": jnp.zeros((L, batch_size, Se, KV, hd), dt)},
+    }
+
+
+def decode_step(cfg, params, cache, token):
+    pos = cache["pos"]
+    x = B.embed(params["embed"], token)
+    ptab = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)
+    x = x + ptab[None]
+
+    def body(h, xs):
+        lp, sc, cc = xs
+        h, new_self, _ = _dec_layer(cfg, lp, h, None, None,
+                                    self_kv=sc, cross_kv=cc, pos=pos)
+        return h, new_self
+
+    x, new_self = B.scan_layers(
+        body, x, (params["dec_layers"], cache["self"], cache["cross"]),
+        unroll=cfg.unroll)
+    x = B.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = B.unembed(params["embed"], x)
+    return logits, {"pos": pos + 1, "self": new_self, "cross": cache["cross"]}

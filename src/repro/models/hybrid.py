@@ -1,0 +1,184 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared attention+MLP block
+(weights reused) applied every `shared_attn_every` ssm layers.  The 38-layer
+config becomes 6 groups of 6 ssm layers (each followed by the shared block)
+plus a 2-layer tail."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention as A
+from repro.models.layers import basic as B
+from repro.models.layers import ssm as S
+from repro.models.transformer import CACHE_PAD, _full_cache_from_kv
+from repro.sharding.rules import constrain_batch
+
+
+def _split(cfg):
+    every = cfg.shared_attn_every
+    G = cfg.n_layers // every
+    tail = cfg.n_layers - G * every
+    return every, G, tail
+
+
+def _init_ssm_layer(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"ln": B.init_norm(cfg, k1), "ssm": S.init_ssm(cfg, k2)}
+
+
+def init_lm(cfg, key):
+    every, G, tail = _split(cfg)
+    ks = jax.random.split(key, 6)
+    main_keys = jax.random.split(ks[0], G * every)
+    main = jax.vmap(lambda k: _init_ssm_layer(cfg, k))(main_keys)
+    main = jax.tree.map(lambda a: a.reshape((G, every) + a.shape[1:]), main)
+    p = {
+        "embed": B.init_embedding(cfg, ks[1]),
+        "ssm_main": main,
+        "shared": {
+            "ln1": B.init_norm(cfg, ks[2]),
+            "attn": A.init_attention(cfg, ks[3]),
+            "ln2": B.init_norm(cfg, ks[4]),
+            "mlp": B.init_mlp(cfg, ks[5]),
+        },
+        "final_norm": B.init_norm(cfg, jax.random.fold_in(key, 11)),
+    }
+    if tail:
+        tail_keys = jax.random.split(jax.random.fold_in(key, 13), tail)
+        p["ssm_tail"] = jax.vmap(lambda k: _init_ssm_layer(cfg, k))(tail_keys)
+    return p
+
+
+def _ssm_layer_fwd(cfg, lp, x, state=None):
+    x = constrain_batch(x)
+    h = B.apply_norm(lp["ln"], x, cfg.norm)
+    if state is None:
+        y, new_state = S.apply_ssm(lp["ssm"], h, cfg, None)
+    else:
+        y, new_state = S.decode_ssm(lp["ssm"], h, cfg, state)
+    return x + y, new_state
+
+
+def _shared_fwd(cfg, sp, x, positions):
+    x = constrain_batch(x)
+    h = B.apply_norm(sp["ln1"], x, cfg.norm)
+    q, k, v = A.qkv(sp["attn"], h, cfg, positions)
+    if x.shape[1] <= 512:
+        o = A.full_attention(q, k, v, causal=True)
+    else:
+        o = A.chunked_attention(q, k, v, cfg, causal=True)
+    x = x + o.reshape(x.shape[0], x.shape[1], cfg.q_dim) @ sp["attn"]["wo"]
+    h = B.apply_norm(sp["ln2"], x, cfg.norm)
+    return x + B.apply_mlp(sp["mlp"], h, cfg), (k, v)
+
+
+def _shared_decode(cfg, sp, x, kv_cache, pos):
+    h = B.apply_norm(sp["ln1"], x, cfg.norm)
+    q, k, v = A.qkv(sp["attn"], h, cfg, jnp.full((1,), pos))
+    kc, vc, kp = A.cache_update(kv_cache["k"], kv_cache["v"], kv_cache["kv_pos"],
+                                k, v, pos)
+    o = A.decode_attention(q, kc, vc, kp, pos)
+    x = x + o.reshape(x.shape[0], 1, cfg.q_dim) @ sp["attn"]["wo"]
+    h = B.apply_norm(sp["ln2"], x, cfg.norm)
+    return x + B.apply_mlp(sp["mlp"], h, cfg), {"k": kc, "v": vc, "kv_pos": kp}
+
+
+def _forward(cfg, params, x, positions, collect: bool):
+    every, G, tail = _split(cfg)
+    remat = cfg.remat == "full"
+
+    def ssm_body(h, lp):
+        h, st = _ssm_layer_fwd(cfg, lp, h)
+        return h, (st if collect else None)
+
+    ssm_body_fn = jax.checkpoint(ssm_body) if remat else ssm_body
+
+    def group_body(h, lp):
+        h, states = B.scan_layers(ssm_body_fn, h, lp, unroll=cfg.unroll)
+        h, kv = _shared_fwd(cfg, params["shared"], h, positions)
+        return h, ((states, kv) if collect else None)
+
+    group_fn = jax.checkpoint(group_body) if remat else group_body
+    x, collected = B.scan_layers(group_fn, x, params["ssm_main"],
+                                 unroll=cfg.unroll)
+    tail_states = None
+    if tail:
+        x, tail_states = B.scan_layers(ssm_body_fn, x, params["ssm_tail"],
+                                       unroll=cfg.unroll)
+    return x, collected, tail_states
+
+
+def train_loss(cfg, params, batch):
+    x = B.embed(params["embed"], batch["tokens"])
+    positions = jnp.arange(x.shape[1])
+    x, _, _ = _forward(cfg, params, x, positions, collect=False)
+    x = B.apply_norm(params["final_norm"], x, cfg.norm)
+    return B.lm_loss_chunked(params["embed"], x, batch["tokens"],
+                             chunk=cfg.loss_chunk, unroll=cfg.unroll)
+
+
+def prefill(cfg, params, batch):
+    x = B.embed(params["embed"], batch["tokens"])
+    S_ = x.shape[1]
+    positions = jnp.arange(S_)
+    x, collected, tail_states = _forward(cfg, params, x, positions, collect=True)
+    x = B.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = B.unembed(params["embed"], x[:, -1:])
+    states, (k, v) = collected
+    cache = {
+        "pos": jnp.int32(S_),
+        "ssm_main": states,  # (G, every, ...) pytree of conv/h states
+        "attn": jax.vmap(lambda kk, vv: _full_cache_from_kv(kk, vv, S_))(k, v),
+        "ssm_tail": tail_states,
+    }
+    return logits, cache
+
+
+def init_cache(cfg, batch_size: int, seq_len: int):
+    every, G, tail = _split(cfg)
+    dt = B.dtype_of(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    C = seq_len + CACHE_PAD
+    one = S.init_ssm_state(cfg, batch_size)
+    stack = lambda t, n: jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), t)
+    cache = {
+        "pos": jnp.int32(seq_len),
+        "ssm_main": stack(stack(one, every), G),
+        "attn": {"k": jnp.zeros((G, batch_size, C, KV, hd), dt),
+                 "v": jnp.zeros((G, batch_size, C, KV, hd), dt),
+                 "kv_pos": jnp.full((G, C), -1, jnp.int32)},
+        "ssm_tail": stack(one, tail) if tail else None,
+    }
+    return cache
+
+
+def decode_step(cfg, params, cache, token):
+    every, G, tail = _split(cfg)
+    pos = cache["pos"]
+    x = B.embed(params["embed"], token)
+
+    def ssm_body(h, xs):
+        lp, st = xs
+        h, new_st = _ssm_layer_fwd(cfg, lp, h, state=st)
+        return h, new_st
+
+    def group_body(h, xs):
+        lp, st, kv = xs
+        h, new_st = B.scan_layers(ssm_body, h, (lp, st), unroll=cfg.unroll)
+        h, new_kv = _shared_decode(cfg, params["shared"], h, kv, pos)
+        return h, (new_st, new_kv)
+
+    x, (new_states, new_attn) = B.scan_layers(
+        group_body, x, (params["ssm_main"], cache["ssm_main"], cache["attn"]),
+        unroll=cfg.unroll)
+    new_tail = None
+    if tail:
+        x, new_tail = B.scan_layers(ssm_body, x,
+                                    (params["ssm_tail"], cache["ssm_tail"]),
+                                    unroll=cfg.unroll)
+    x = B.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = B.unembed(params["embed"], x)
+    return logits, {"pos": pos + 1, "ssm_main": new_states, "attn": new_attn,
+                    "ssm_tail": new_tail}

@@ -1,0 +1,87 @@
+"""Mixture-of-Experts block: top-k routing with GShard-style capacity
+dispatch/combine einsums (group = one batch row, so dispatch cost is
+O(B·S²·k·cap·d/E) — <1 % of expert FLOPs at our shapes, vs the E/k× waste of
+dense-all-experts).
+
+Expert parallelism: when n_experts divides the 'model' mesh axis the expert
+dimension shards across it (true EP, all-to-all dispatch chosen by GSPMD);
+otherwise expert weights shard d_ff over 'model' (TP-MoE) — see
+sharding/rules.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.basic import dense_init, dtype_of
+from repro.sharding.rules import constrain_batch_only
+
+
+def init_moe(cfg, key):
+    dt = dtype_of(cfg)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wg": dense_init(ks[1], (E, d, f), dt),
+        "wi": dense_init(ks[2], (E, d, f), dt),
+        "wo": dense_init(ks[3], (E, f, d), dt),
+    }
+
+
+def capacity(cfg, g: int) -> int:
+    c = math.ceil(g * cfg.n_experts_active / cfg.n_experts * cfg.capacity_factor)
+    return max(1, min(g, (c + 3) & ~3 if g >= 8 else c))
+
+
+def apply_moe(params: Dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """x: (B, S, d) → (B, S, d).  GShard capacity dispatch within groups of
+    MOE_GROUP tokens.  The group dim is kept SEPARATE from batch —
+    (B, n_g, g, …) — so the batch dim stays data-sharded and the group dim
+    inherits the sequence's 'model' sharding (merging them would force GSPMD
+    to all-gather the sequence).  Dropped tokens (over per-group capacity)
+    contribute 0 — the residual passes them through."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_active
+    g = min(cfg.moe_group, S)
+    while S % g:
+        g //= 2
+    n = S // g
+    C = capacity(cfg, g)
+    xg = x.reshape(B, n, g, d)
+
+    logits = (xg.astype(jnp.float32)) @ params["router"]          # (B,n,g,E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                          # (B,n,g,k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)           # (B,n,g,k,E)
+    flat = onehot.reshape(B, n, g * k, E)
+    pos = jnp.cumsum(flat, axis=2) - flat                         # queue position
+    keep = (pos < C) * flat
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32) \
+        * keep[..., None]                                         # (B,n,g*k,E,C)
+    cap_oh = cap_oh.reshape(B, n, g, k, E, C)
+    dispatch = cap_oh.sum(3).astype(x.dtype)                      # (B,n,g,E,C)
+    combine = (cap_oh * topv[..., None, None]).sum(3).astype(x.dtype)
+
+    xe = jnp.einsum("bnsec,bnsd->bnecd", dispatch, xg)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("bnecd,edf->bnecf", xe, params["wg"])) \
+        * jnp.einsum("bnecd,edf->bnecf", xe, params["wi"])
+    ye = jnp.einsum("bnecf,efd->bnecd", h, params["wo"])
+    out = jnp.einsum("bnsec,bnecd->bnsd", combine, ye)
+    return out.reshape(B, S, d)
+
+
+def aux_load_balance_loss(params: Dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Switch-style auxiliary loss (fraction·probability per expert)."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    _, topi = jax.lax.top_k(gates, cfg.n_experts_active)
+    frac = jax.nn.one_hot(topi, cfg.n_experts).mean((0, 1, 2))
+    prob = gates.mean((0, 1))
+    return cfg.n_experts * jnp.sum(frac * prob)

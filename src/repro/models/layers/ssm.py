@@ -1,0 +1,161 @@
+"""Mamba2 layer via the chunked SSD (state-space dual) form.
+
+TPU adaptation: instead of the sequential per-token recurrence (GPU-style
+selective scan), the sequence is split into chunks; within a chunk the SSD
+identity turns the recurrence into masked matmuls (MXU work), and a short
+``lax.scan`` carries the (nh, hp, ds) state across chunks.  Decode is the
+single-token recurrence.
+
+Recurrence (scalar-identity A per head, n_groups=1):
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · B_t ⊗ x_t        y_t = C_t·h_t + D·x_t
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.basic import dense_init, dtype_of
+
+
+def init_ssm(cfg, key):
+    dt = dtype_of(cfg)
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ds
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * ds + nh), dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), dt, scale=0.5),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d), dt),
+        "gate_norm": jnp.ones((di,), dt),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di : 2 * di + 2 * ds]
+    dt = proj[..., 2 * di + 2 * ds :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_state=None):
+    """Depthwise causal conv over time.  xBC: (B,S,Cd); conv_w: (K,Cd).
+    conv_state: (B,K-1,Cd) carried activations for decode."""
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(xBC[:, : K - 1])
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i : i + xBC.shape[1]] * conv_w[i] for i in range(K))
+    new_state = xp[:, -(K - 1) :]
+    return jax.nn.silu(out), new_state
+
+
+def _segsum_decay(dA):
+    """dA: (B,c,nh) per-step log-decay → L[i,j]=exp(Σ_{t=j+1..i} dA_t) lower-tri."""
+    cum = jnp.cumsum(dA, axis=1)                       # (B,c,nh)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]     # (B,i,j,nh)
+    c = dA.shape[1]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0), cum
+
+
+def ssm_chunked(cfg, x, B_in, C_in, dt, A, h0=None):
+    """Chunked SSD.  x:(B,S,nh,hp)  B_in/C_in:(B,S,ds)  dt:(B,S,nh) post-softplus,
+    A:(nh,) negative.  Returns y:(B,S,nh,hp), h_last:(B,nh,hp,ds)."""
+    Bsz, S, nh, hp = x.shape
+    ds = B_in.shape[-1]
+    c = min(cfg.ssm_chunk, S)
+    while S % c:
+        c //= 2
+    n = S // c
+    xc = x.reshape(Bsz, n, c, nh, hp).astype(jnp.float32)
+    Bc = B_in.reshape(Bsz, n, c, ds).astype(jnp.float32)
+    Cc = C_in.reshape(Bsz, n, c, ds).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, n, c, nh).astype(jnp.float32)
+    dAc = dtc * A[None, None, None, :]                 # log-decay per step
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hp, ds), jnp.float32)
+
+    def chunk(h, xs):
+        xj, Bj, Cj, dAj, dtj = xs  # (B,c,nh,hp),(B,c,ds),(B,c,ds),(B,c,nh),(B,c,nh)
+        L, cum = _segsum_decay(dAj)                    # (B,i,j,nh), (B,c,nh)
+        xdt = xj * dtj[..., None]                      # dt-weighted inputs
+        scores = jnp.einsum("bis,bjs->bij", Cj, Bj)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, L, xdt)
+        y_inter = jnp.einsum("bis,bhps->bihp", Cj, h) * jnp.exp(cum)[..., None]
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)   # (B,c,nh)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + jnp.einsum(
+            "bjs,bjhp->bhps", Bj, xdt * decay_to_end[..., None])
+        return h_new, y_intra + y_inter
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xc, Bc, Cc, dAc, dtc))
+    h_last, ys = jax.lax.scan(chunk, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, nh, hp)
+    return y.astype(x.dtype), h_last
+
+
+def apply_ssm(params: Dict, x: jnp.ndarray, cfg, state=None):
+    """Full Mamba2 mixer over a sequence.
+    state: None (train/prefill from scratch) or dict(conv, h) for resume.
+    Returns (y, new_state)."""
+    B, S, d = x.shape
+    nh, hp, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], conv_state)
+    xs = xBC[..., : cfg.d_inner].reshape(B, S, nh, hp)
+    B_in = xBC[..., cfg.d_inner : cfg.d_inner + ds]
+    C_in = xBC[..., cfg.d_inner + ds :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                      # (nh,) negative
+    h0 = None if state is None else state["h"]
+    y, h_last = ssm_chunked(cfg, xs, B_in, C_in, dt, A, h0=h0)
+    y = y + xs * params["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = y * jax.nn.silu(z)
+    y = (y.astype(jnp.float32) * params["gate_norm"].astype(jnp.float32)
+         ).astype(x.dtype)
+    out = y @ params["out_proj"]
+    return out, {"conv": new_conv, "h": h_last}
+
+
+def decode_ssm(params: Dict, x: jnp.ndarray, cfg, state):
+    """Single-token recurrence.  x: (B,1,d)."""
+    B, _, d = x.shape
+    nh, hp, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], state["conv"])
+    xs = xBC[..., : cfg.d_inner].reshape(B, nh, hp)
+    B_in = xBC[..., cfg.d_inner : cfg.d_inner + ds][:, 0]     # (B,ds)
+    C_in = xBC[..., cfg.d_inner + ds :][:, 0]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                    # (B,nh)
+    h = state["h"] * decay[..., None, None] + jnp.einsum(
+        "bs,bhp,bh->bhps", B_in.astype(jnp.float32), xs.astype(jnp.float32), dt)
+    y = jnp.einsum("bs,bhps->bhp", C_in.astype(jnp.float32), h)
+    y = y + xs.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = (y.astype(jnp.float32) * params["gate_norm"].astype(jnp.float32)).astype(x.dtype)
+    return y @ params["out_proj"], {"conv": new_conv, "h": h}
+
+
+def init_ssm_state(cfg, batch: int):
+    nh, hp, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * ds
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim),
+                          jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32),
+        "h": jnp.zeros((batch, nh, hp, ds), jnp.float32),
+    }

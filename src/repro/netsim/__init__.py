@@ -1,0 +1,4 @@
+from repro.netsim.sim import Simulator, Resource, run_process
+from repro.netsim.verbs import SimParams, Verbs
+
+__all__ = ["Simulator", "Resource", "run_process", "SimParams", "Verbs"]

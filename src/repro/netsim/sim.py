@@ -1,0 +1,133 @@
+"""A compact discrete-event simulator for the RDMA fabric + server CPU.
+
+The paper evaluates Erda on a 2-node InfiniBand cluster; this container has no
+NIC, so (mirroring the paper's own choice to *simulate NVM*) we simulate the
+fabric with an event-driven model and calibrate its constants against the
+paper's measured latencies (§5.2).  The simulator is deliberately small:
+
+  * ``Simulator`` — a heapq event loop with virtual time in seconds.
+  * ``Resource``  — an m-worker FIFO resource (the server's CPU cores); it
+    meters busy-seconds so the paper's "normalized CPU cost" (Figs 22-25) can
+    be computed.
+  * ``run_process`` — drives generator-based processes that yield
+    ``("delay", seconds)`` or ``("acquire", resource, service_seconds)`` steps.
+
+Client threads are closed-loop (issue, wait, repeat), as YCSB does.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from typing import Callable, Generator, List, Optional, Tuple
+
+Step = Tuple  # ("delay", s) | ("acquire", Resource, s)
+
+
+class Simulator:
+    def __init__(self):
+        self.now = 0.0
+        self._q: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = 0
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        if t < self.now:
+            raise ValueError(f"scheduling in the past: {t} < {self.now}")
+        heapq.heappush(self._q, (t, self._seq, fn))
+        self._seq += 1
+
+    def after(self, delay: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + delay, fn)
+
+    def run(self, until: float = math.inf) -> None:
+        while self._q and self._q[0][0] <= until:
+            t, _, fn = heapq.heappop(self._q)
+            self.now = t
+            fn()
+        if until is not math.inf:
+            self.now = max(self.now, until)
+
+
+class Resource:
+    """FIFO multi-worker resource with busy-time metering (the server CPU)."""
+
+    def __init__(self, sim: Simulator, workers: int, name: str = "cpu"):
+        self.sim = sim
+        self.workers = workers
+        self.name = name
+        self._free = workers
+        self._queue: List[Tuple[float, Callable[[], None]]] = []
+        self.busy_seconds = 0.0
+        self.completed = 0
+
+    def request(self, service_s: float, done: Callable[[], None]) -> None:
+        if self._free > 0:
+            self._free -= 1
+            self._start(service_s, done)
+        else:
+            self._queue.append((service_s, done))
+
+    def _start(self, service_s: float, done: Callable[[], None]) -> None:
+        self.busy_seconds += service_s
+
+        def _finish():
+            self.completed += 1
+            done()
+            if self._queue:
+                s, d = self._queue.pop(0)
+                self._start(s, d)
+            else:
+                self._free += 1
+
+        self.sim.after(service_s, _finish)
+
+    def utilization(self, horizon_s: float) -> float:
+        if horizon_s <= 0:
+            return 0.0
+        return self.busy_seconds / (horizon_s * self.workers)
+
+
+def run_process(sim: Simulator, gen: Generator, done: Optional[Callable[[], None]] = None) -> None:
+    """Drive a generator process; see module docstring for the step protocol."""
+
+    def _advance(_=None):
+        try:
+            step = next(gen)
+        except StopIteration:
+            if done is not None:
+                done()
+            return
+        kind = step[0]
+        if kind == "delay":
+            sim.after(step[1], _advance)
+        elif kind == "acquire":
+            step[1].request(step[2], _advance)
+        else:  # pragma: no cover - programming error
+            raise ValueError(f"unknown step {step!r}")
+
+    _advance()
+
+
+class ClosedLoopClient:
+    """A YCSB-style closed-loop client thread: issue op, wait, record, repeat."""
+
+    def __init__(self, sim: Simulator, op_factory: Callable[[], Generator], horizon_s: float):
+        self.sim = sim
+        self.op_factory = op_factory
+        self.horizon_s = horizon_s
+        self.latencies: List[float] = []
+        self.completed = 0
+
+    def start(self) -> None:
+        self._issue()
+
+    def _issue(self) -> None:
+        if self.sim.now >= self.horizon_s:
+            return
+        t0 = self.sim.now
+
+        def _done():
+            self.latencies.append(self.sim.now - t0)
+            self.completed += 1
+            self._issue()
+
+        run_process(self.sim, self.op_factory(), _done)

@@ -1,0 +1,3 @@
+from repro.nvmsim.device import NVMDevice, NVMStats, TornWrite, FaultInjector
+
+__all__ = ["NVMDevice", "NVMStats", "TornWrite", "FaultInjector"]

@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (collective_bytes_from_hlo, roofline_terms,
+                                     RooflineReport)
+
+__all__ = ["collective_bytes_from_hlo", "roofline_terms", "RooflineReport"]

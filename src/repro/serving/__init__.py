@@ -1,0 +1,4 @@
+from repro.serving.kv_store import ErdaKVPageStore
+from repro.serving.engine import ServeEngine
+
+__all__ = ["ErdaKVPageStore", "ServeEngine"]

@@ -1,0 +1,55 @@
+"""Batched serving engine: prefill a batch of requests, decode greedily, and
+checkpoint decode state into the Erda page store so a preempted replica
+resumes bit-identically (the serving-side use of the paper's protocol)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.kv_store import ErdaKVPageStore
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, page_store: Optional[ErdaKVPageStore] = None,
+                 snapshot_every: int = 0):
+        self.model = model
+        self.params = params
+        self.pages = page_store or ErdaKVPageStore()
+        self.snapshot_every = snapshot_every
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, batch: Dict, n_tokens: int, *, seq_id: int = 0,
+                 crash_at: Optional[int] = None) -> np.ndarray:
+        """Greedy decode; optionally 'crash' after `crash_at` tokens (state is
+        then restored from the Erda page store and decoding continues)."""
+        logits, cache = self._prefill(self.params, batch)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [np.asarray(token)]
+        step = 0
+        while len(out) < n_tokens:
+            if self.snapshot_every and step % self.snapshot_every == 0:
+                self.pages.snapshot_cache(seq_id, cache)
+                self.pages.put_page(seq_id, "__tokens__", 0,
+                                    np.concatenate(out, axis=1))
+            if crash_at is not None and step == crash_at:
+                cache = self._recover(seq_id, cache)
+                toks = self.pages.get_page(seq_id, "__tokens__", 0)
+                out = [toks[:, i : i + 1] for i in range(toks.shape[1])]
+                crash_at = None
+                token = jnp.asarray(out[-1])
+                continue
+            logits, cache = self._decode(self.params, cache, token)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(np.asarray(token))
+            step += 1
+        return np.concatenate(out, axis=1)
+
+    def _recover(self, seq_id: int, template):
+        restored = self.pages.restore_cache(seq_id, template)
+        if restored is None:
+            raise RuntimeError("no snapshot to recover from")
+        return restored

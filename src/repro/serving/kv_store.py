@@ -1,0 +1,63 @@
+"""Erda-backed KV-cache page store for serving (DESIGN.md §2).
+
+Decode-time KV pages / SSM state snapshots are Erda objects: appended with one
+one-sided write each, page-table entries are the 8-byte atomic words, and a
+preempted host's torn page is detected by CRC at fetch and falls back to the
+previous snapshot.  The log cleaner doubles as page eviction/compaction."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.serialization import leaf_from_bytes, leaf_to_bytes
+from repro.core import ErdaStore, ServerConfig
+from repro.core.hashtable import splitmix64
+
+
+def _page_key(seq_id: int, name: str, idx: int) -> int:
+    return splitmix64(hash((seq_id, name, idx)) & 0x7FFFFFFFFFFFFFFF) | 1
+
+
+class ErdaKVPageStore:
+    def __init__(self, store: Optional[ErdaStore] = None):
+        self.store = store or ErdaStore(ServerConfig(
+            device_size=512 << 20, table_capacity=1 << 14,
+            n_heads=4, region_size=16 << 20, segment_size=4 << 20))
+
+    def put_page(self, seq_id: int, name: str, idx: int, array) -> None:
+        self.store.write(_page_key(seq_id, name, idx), leaf_to_bytes(array))
+
+    def get_page(self, seq_id: int, name: str, idx: int) -> Optional[np.ndarray]:
+        raw = self.store.read(_page_key(seq_id, name, idx))
+        return None if raw is None else leaf_from_bytes(raw)
+
+    def drop_page(self, seq_id: int, name: str, idx: int) -> None:
+        self.store.delete(_page_key(seq_id, name, idx))
+
+    # ------------------------------------------------- cache snapshot/restore
+    def snapshot_cache(self, seq_id: int, cache) -> int:
+        """Persist a whole decode cache pytree as numbered pages."""
+        leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
+        for i, (path, leaf) in enumerate(leaves):
+            self.put_page(seq_id, jax.tree_util.keystr(path), 0, leaf)
+        return len(leaves)
+
+    def restore_cache(self, seq_id: int, template):
+        leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+        out = []
+        for path, leaf in leaves:
+            arr = self.get_page(seq_id, jax.tree_util.keystr(path), 0)
+            if arr is None:
+                return None
+            out.append(arr.astype(np.asarray(leaf).dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), out)
+
+    def compact(self) -> None:
+        """Page eviction/compaction = the paper's lock-free log cleaning."""
+        for head_id in list(self.store.server.log.heads):
+            c = self.store.server.maybe_start_cleaning(head_id)
+            if c is not None:
+                c.run_to_completion()

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (batch_axes, batch_spec, cache_specs,
+                                  param_specs, MeshInfo)
+
+__all__ = ["batch_axes", "batch_spec", "cache_specs", "param_specs", "MeshInfo"]

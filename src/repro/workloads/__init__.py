@@ -1,0 +1,3 @@
+from repro.workloads.ycsb import WORKLOADS, Workload, ZipfianGenerator, make_ops
+
+__all__ = ["WORKLOADS", "Workload", "ZipfianGenerator", "make_ops"]

@@ -1,0 +1,63 @@
+"""YCSB workload generation (§5.1 of the paper).
+
+Four workloads over a Zipfian(0.99) key popularity distribution:
+  YCSB-C 100% read · YCSB-B 95/5 · YCSB-A 50/50 · update-only 100% write.
+
+The Zipfian generator is the standard YCSB one (Gray et al., "Quickly
+generating billion-record synthetic databases"), vectorized with numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+
+class ZipfianGenerator:
+    def __init__(self, n_items: int, theta: float = 0.99, seed: int = 0):
+        self.n = int(n_items)
+        self.theta = theta
+        ranks = np.arange(1, self.n + 1, dtype=np.float64)
+        self.zetan = float(np.sum(1.0 / ranks**theta))
+        self.zeta2 = float(np.sum(1.0 / np.arange(1, 3, dtype=np.float64) ** theta))
+        self.alpha = 1.0 / (1.0 - theta)
+        self.eta = (1.0 - (2.0 / self.n) ** (1.0 - theta)) / (1.0 - self.zeta2 / self.zetan)
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, size: int) -> np.ndarray:
+        u = self.rng.random(size)
+        uz = u * self.zetan
+        out = np.floor(self.n * (self.eta * u - self.eta + 1.0) ** self.alpha).astype(np.int64)
+        out = np.where(uz < 1.0, 0, out)
+        out = np.where((uz >= 1.0) & (uz < 1.0 + 0.5**self.theta), 1, out)
+        return np.clip(out, 0, self.n - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    read_fraction: float
+
+    def ops(self, n_ops: int, n_keys: int, seed: int = 0) -> List[Tuple[str, int]]:
+        """Returns a list of ("read"|"update", key_index) ops."""
+        zipf = ZipfianGenerator(n_keys, seed=seed)
+        keys = zipf.sample(n_ops)
+        # scramble popularity ranks over the key space deterministically (YCSB
+        # hashes ranks so hot keys are spread out)
+        scramble = np.random.default_rng(12345).permutation(n_keys)
+        keys = scramble[keys]
+        is_read = np.random.default_rng(seed + 1).random(n_ops) < self.read_fraction
+        return [("read" if r else "update", int(k)) for r, k in zip(is_read, keys)]
+
+
+WORKLOADS = {
+    "ycsb_c": Workload("ycsb_c", 1.00),
+    "ycsb_b": Workload("ycsb_b", 0.95),
+    "ycsb_a": Workload("ycsb_a", 0.50),
+    "update_only": Workload("update_only", 0.00),
+}
+
+
+def make_ops(workload: str, n_ops: int, n_keys: int, seed: int = 0):
+    return WORKLOADS[workload].ops(n_ops, n_keys, seed)

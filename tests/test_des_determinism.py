@@ -1,0 +1,16 @@
+"""The DES must be deterministic (same seed → same results) — required for
+reproducible benchmark tables."""
+from benchmarks.figures import _run_closed_loop
+
+
+def test_closed_loop_deterministic():
+    a = _run_closed_loop("erda", "ycsb_a", 1024, n_threads=4, horizon=0.05)
+    b = _run_closed_loop("erda", "ycsb_a", 1024, n_threads=4, horizon=0.05)
+    assert a == b
+
+
+def test_schemes_differ():
+    e = _run_closed_loop("erda", "ycsb_c", 1024, n_threads=8, horizon=0.05)
+    r = _run_closed_loop("redo", "ycsb_c", 1024, n_threads=8, horizon=0.05)
+    assert e["throughput_kops"] > r["throughput_kops"]
+    assert e["cpu_busy_s"] == 0.0 and r["cpu_busy_s"] > 0

@@ -1,0 +1,99 @@
+import numpy as np
+import pytest
+
+from repro.core import ErdaStore, ServerConfig, make_store
+from repro.core import layout
+
+
+@pytest.fixture
+def store():
+    return ErdaStore(ServerConfig(device_size=64 << 20, table_capacity=1 << 12,
+                                  n_heads=2, region_size=1 << 20, segment_size=32 << 10))
+
+
+def test_write_read(store):
+    store.write(1, b"value-1")
+    assert store.read(1) == b"value-1"
+
+
+def test_update_returns_latest(store):
+    store.write(1, b"v1")
+    store.write(1, b"v2-longer-than-before")
+    assert store.read(1) == b"v2-longer-than-before"
+
+
+def test_missing_key(store):
+    assert store.read(12345) is None
+
+
+def test_delete(store):
+    store.write(9, b"gone soon")
+    store.delete(9)
+    assert store.read(9) is None
+
+
+def test_update_after_delete(store):
+    store.write(9, b"a")
+    store.delete(9)
+    store.write(9, b"b")
+    assert store.read(9) == b"b"
+
+
+def test_old_version_retained_in_log(store):
+    """Out-of-place updates: the previous version must still parse at the old
+    offset — it is the fallback consistency anchor (§4.2)."""
+    store.write(4, b"old-version")
+    store.write(4, b"new-version")
+    entry = store.server.table.lookup(4)
+    _tag, off_new, off_old = layout.unpack_word(entry.word)
+    rec_old = layout.parse_record(store.dev.mem, off_old)
+    rec_new = layout.parse_record(store.dev.mem, off_new)
+    assert rec_old.ok and rec_old.value == b"old-version"
+    assert rec_new.ok and rec_new.value == b"new-version"
+
+
+def test_reads_are_one_sided(store):
+    """YCSB-C's 'CPU cost of Erda is 0': reads must not touch server handlers."""
+    store.write(2, b"x" * 128)
+    before = store.stats["send_ops"]
+    for _ in range(50):
+        assert store.read(2) == b"x" * 128
+    assert store.stats["send_ops"] == before
+    assert store.stats["one_sided_reads"] >= 100  # 2 one-sided reads per read
+
+
+def test_write_is_single_data_write(store):
+    """Zero-copy: one client data write, no redo/ring copy."""
+    before = store.stats["one_sided_writes"]
+    store.write(3, b"z" * 256)
+    assert store.stats["one_sided_writes"] == before + 1
+
+
+def test_many_keys_many_updates(store):
+    rng = np.random.default_rng(0)
+    model = {}
+    for i in range(2000):
+        k = int(rng.integers(1, 200))
+        v = rng.bytes(int(rng.integers(1, 512)))
+        store.write(k, v)
+        model[k] = v
+    for k, v in model.items():
+        assert store.read(k) == v
+
+
+def test_object_never_spans_segments(store):
+    seg = store.server.cfg.segment_size
+    big = b"A" * (seg // 2 + 100)
+    for i in range(1, 6):
+        store.write(i, big)
+    for head in store.server.log.heads.values():
+        for ref in head.index:
+            region = next(r for r in head.regions if r.start <= ref.offset < r.end)
+            seg_idx_start = (ref.offset - region.start) // seg
+            seg_idx_end = (ref.offset + ref.size - 1 - region.start) // seg
+            assert seg_idx_start == seg_idx_end
+
+
+def test_oversized_record_rejected(store):
+    with pytest.raises(ValueError):
+        store.write(1, b"B" * store.server.cfg.segment_size)

@@ -1,0 +1,71 @@
+import pytest
+
+from repro.core import layout
+from repro.core.hashtable import H, HopscotchTable, STATE_VALID
+from repro.nvmsim.device import NVMDevice
+
+
+def make_table(capacity=256):
+    dev = NVMDevice(1 << 20)
+    return HopscotchTable(dev, capacity), dev
+
+
+def test_insert_lookup():
+    t, _ = make_table()
+    t.insert(11, 2, 0x100)
+    e = t.lookup(11)
+    assert e is not None and e.key == 11 and e.head_id == 2
+    tag, new, old = layout.unpack_word(e.word)
+    assert tag == 1 and new == 0x100 and old == layout.NULL_OFF
+
+
+def test_lookup_missing():
+    t, _ = make_table()
+    assert t.lookup(99) is None
+
+
+def test_neighborhood_invariant_under_displacement():
+    """Hopscotch guarantee: every key stays within H slots of its home, even
+    after inserts force displacement."""
+    t, _ = make_table(capacity=64)
+    keys = list(range(1, 49))
+    for k in keys:
+        t.insert(k, 0, k)
+    for k in keys:
+        e = t.lookup(k)
+        assert e is not None, f"lost key {k}"
+        dist = (e.slot - t.home(k)) % t.capacity
+        assert dist < H
+
+
+def test_duplicate_insert_raises():
+    t, _ = make_table()
+    t.insert(5, 0, 1)
+    with pytest.raises(KeyError):
+        t.insert(5, 0, 2)
+
+
+def test_atomic_word_update_is_8_bytes(
+):
+    t, dev = make_table()
+    t.insert(3, 0, 0x40)
+    e = t.lookup(3)
+    before = dev.stats.snapshot()
+    t.write_word(e.slot, layout.flip_word(e.word, 0x80))
+    d = dev.stats.delta(before)
+    assert d.bytes_written == 8 and d.atomic_ops == 1
+
+
+def test_flip_update_programs_few_bytes_dcw():
+    """DCW: consecutive flip updates only program the changed offset region +
+    tag — ≤5 of the 8 bytes actually change."""
+    t, dev = make_table()
+    t.insert(3, 0, 0x40)
+    e = t.lookup(3)
+    t.write_word(e.slot, layout.flip_word(e.word, 0x48))
+    before = dev.stats.snapshot()
+    w = t.read_word(e.slot)
+    t.write_word(e.slot, layout.flip_word(w, 0x50))
+    d = dev.stats.delta(before)
+    assert d.bytes_written == 8
+    assert d.bytes_programmed <= 5

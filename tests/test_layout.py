@@ -1,0 +1,62 @@
+import numpy as np
+import pytest
+
+from repro.core import layout
+
+
+def test_pack_parse_roundtrip():
+    rec = layout.pack_record(42, b"hello world")
+    view = layout.parse_record(np.frombuffer(rec, dtype=np.uint8))
+    assert view.ok and not view.deleted
+    assert view.key == 42 and view.value == b"hello world"
+    assert view.size == len(rec) == layout.record_size(11)
+
+
+def test_deleted_record():
+    rec = layout.pack_record(7, None, delete=True)
+    view = layout.parse_record(np.frombuffer(rec, dtype=np.uint8))
+    assert view.ok and view.deleted and view.key == 7 and view.value is None
+    assert len(rec) == layout.record_size(0, delete=True) == 19  # 11B hdr + 8B key
+
+
+def test_torn_record_fails_crc():
+    rec = bytearray(layout.pack_record(1, b"x" * 100))
+    for cut in (len(rec) - 1, len(rec) // 2, layout.HEADER_SIZE + 2):
+        torn = bytes(rec[:cut]) + b"\x00" * (len(rec) - cut)  # lost NIC-cache tail
+        view = layout.parse_record(np.frombuffer(torn, dtype=np.uint8))
+        assert not view.ok
+
+
+def test_single_bitflip_fails_crc():
+    rec = bytearray(layout.pack_record(1, b"y" * 64))
+    rec[layout.HEADER_SIZE + 8 + 10] ^= 0x4
+    view = layout.parse_record(np.frombuffer(bytes(rec), dtype=np.uint8))
+    assert not view.ok
+
+
+def test_atomic_word_pack_unpack():
+    for tag in (0, 1):
+        w = layout.pack_word(tag, 123, 456)
+        t, new, old = layout.unpack_word(w)
+        assert (t, new, old) == (tag, 123, 456)
+
+
+def test_flip_word_swaps_roles_and_flips_tag():
+    w = layout.pack_word(1, 100, 50)
+    w2 = layout.flip_word(w, 200)
+    tag, new, old = layout.unpack_word(w2)
+    assert tag == 0 and new == 200 and old == 100
+    w3 = layout.flip_word(w2, 300)
+    tag, new, old = layout.unpack_word(w3)
+    assert tag == 1 and new == 300 and old == 200
+
+
+def test_flip_word_only_touches_one_offset_region():
+    """The paper's DCW argument: a flip rewrites the tag bit + ONE 31-bit
+    region; the other region's bits are untouched."""
+    w = layout.pack_word(1, 0x1234567, 0x7654321)
+    w2 = layout.flip_word(w, 0x0ABCDEF)
+    # region A (bits 62..32) held the new offset 0x1234567 and must be intact
+    assert (w >> 32) & 0x7FFFFFFF == (w2 >> 32) & 0x7FFFFFFF == 0x1234567
+    # only region B + tag changed
+    assert (w2 >> 1) & 0x7FFFFFFF == 0x0ABCDEF

@@ -1,0 +1,58 @@
+"""Log-space edge cases: segment fences, region growth, head assignment."""
+import pytest
+
+from repro.core.log import Head, LogSpace
+from repro.nvmsim.device import NVMDevice
+
+
+def make_head(region=1 << 16, seg=1 << 12):
+    dev = NVMDevice(1 << 22)
+    return Head(0, dev, region, seg), dev
+
+
+def test_reserve_is_8_aligned_and_monotonic():
+    h, _ = make_head()
+    addrs = [h.reserve(n) for n in (1, 7, 8, 9, 100, 4000)]
+    assert all(a % 8 == 0 for a in addrs)
+    assert addrs == sorted(addrs)
+
+
+def test_segment_fence_skips():
+    h, _ = make_head(region=1 << 16, seg=1 << 12)
+    h.reserve(4000)                 # leaves < 96 bytes in the 4 KiB segment
+    a = h.reserve(200)              # cannot span: must start at next segment
+    assert a % (1 << 12) == 0
+
+
+def test_region_growth_chains():
+    h, dev = make_head(region=1 << 14, seg=1 << 12)
+    before = len(h.regions)
+    for _ in range(40):             # overflow the first 16 KiB region
+        h.reserve(1000)
+    assert len(h.regions) > before
+    # tail address lives inside the newest region
+    r = h.regions[-1]
+    assert r.start <= h.tail <= r.end
+
+
+def test_oversized_record_rejected():
+    h, _ = make_head(seg=1 << 12)
+    with pytest.raises(ValueError):
+        h.reserve((1 << 12) + 1)
+
+
+def test_head_assignment_spreads_keys():
+    dev = NVMDevice(1 << 24)
+    ls = LogSpace(dev, n_heads=4, region_size=1 << 14, segment_size=1 << 12)
+    heads = {ls.head_for_key(k).head_id for k in range(100)}
+    assert len(heads) == 4          # all heads used
+    # deterministic assignment
+    assert ls.head_for_key(42).head_id == ls.head_for_key(42).head_id
+
+
+def test_head_array_registration():
+    dev = NVMDevice(1 << 24)
+    ls = LogSpace(dev, n_heads=2, region_size=1 << 14, segment_size=1 << 12)
+    arr = ls.head_array()
+    assert set(arr) == {0, 1}
+    assert all(isinstance(v, int) for v in arr.values())

@@ -1,0 +1,120 @@
+import math
+
+import pytest
+
+from repro.netsim import Resource, SimParams, Simulator, Verbs, run_process
+from repro.netsim.sim import ClosedLoopClient
+from repro.workloads import WORKLOADS, ZipfianGenerator
+
+
+def test_event_ordering():
+    sim = Simulator()
+    out = []
+    sim.after(2.0, lambda: out.append("b"))
+    sim.after(1.0, lambda: out.append("a"))
+    sim.after(3.0, lambda: out.append("c"))
+    sim.run()
+    assert out == ["a", "b", "c"] and sim.now == 3.0
+
+
+def test_resource_queues_and_meters():
+    sim = Simulator()
+    cpu = Resource(sim, workers=1)
+    done = []
+    for i in range(3):
+        cpu.request(1.0, lambda i=i: done.append(sim.now))
+    sim.run()
+    assert done == [1.0, 2.0, 3.0]
+    assert cpu.busy_seconds == pytest.approx(3.0)
+
+
+def test_multi_worker_parallelism():
+    sim = Simulator()
+    cpu = Resource(sim, workers=4)
+    done = []
+    for _ in range(4):
+        cpu.request(1.0, lambda: done.append(sim.now))
+    sim.run()
+    assert done == [1.0] * 4
+
+
+def test_process_composition():
+    sim = Simulator()
+    cpu = Resource(sim, workers=1)
+    p = SimParams()
+    verbs = Verbs(sim, p, cpu)
+
+    def op():
+        yield from verbs.one_sided_read(64)
+        yield from verbs.send_recv(10e-6)
+
+    fin = []
+    run_process(sim, op(), lambda: fin.append(sim.now))
+    sim.run()
+    expected = (p.t_one_sided_s + 64 / p.net_bandwidth_Bps
+                + 2 * p.t_half_rtt_s + 2 * 64 / p.net_bandwidth_Bps
+                + p.t_cpu_poll_s + 10e-6)
+    assert fin[0] == pytest.approx(expected)
+
+
+def test_closed_loop_throughput_scales_without_cpu():
+    """Erda's YCSB-C story: one-sided ops scale ~linearly in client threads."""
+    p = SimParams()
+
+    def throughput(n_threads):
+        sim = Simulator()
+        cpu = Resource(sim, p.server_cores)
+        verbs = Verbs(sim, p, cpu)
+
+        def op():
+            yield from verbs.one_sided_read(64)
+            yield from verbs.one_sided_read(1024)
+
+        clients = [ClosedLoopClient(sim, op, 0.2) for _ in range(n_threads)]
+        for c in clients:
+            c.start()
+        sim.run(until=0.2)
+        return sum(c.completed for c in clients) / 0.2
+
+    t1, t16 = throughput(1), throughput(16)
+    assert t16 / t1 == pytest.approx(16, rel=0.05)
+
+
+def test_closed_loop_throughput_saturates_on_cpu():
+    """Baseline story: two-sided ops plateau at cores/service_time."""
+    p = SimParams()
+
+    def throughput(n_threads):
+        sim = Simulator()
+        cpu = Resource(sim, p.server_cores)
+        verbs = Verbs(sim, p, cpu)
+
+        def op():
+            yield from verbs.send_recv(p.t_cpu_read_base_s)
+
+        clients = [ClosedLoopClient(sim, op, 0.5) for _ in range(n_threads)]
+        for c in clients:
+            c.start()
+        sim.run(until=0.5)
+        return sum(c.completed for c in clients) / 0.5
+
+    cap = p.server_cores / (p.t_cpu_read_base_s + p.t_cpu_poll_s)
+    t64 = throughput(64)
+    assert t64 <= cap * 1.01
+    assert t64 >= cap * 0.9
+
+
+def test_zipfian_skew():
+    z = ZipfianGenerator(1000, seed=3)
+    s = z.sample(20000)
+    top = (s < 10).mean()
+    assert top > 0.3  # zipfian 0.99 concentrates mass on hot keys
+    assert s.min() >= 0 and s.max() < 1000
+
+
+@pytest.mark.parametrize("name,frac", [("ycsb_c", 1.0), ("ycsb_b", 0.95),
+                                       ("ycsb_a", 0.5), ("update_only", 0.0)])
+def test_workload_mixes(name, frac):
+    ops = WORKLOADS[name].ops(5000, 100, seed=1)
+    reads = sum(1 for o, _ in ops if o == "read") / len(ops)
+    assert reads == pytest.approx(frac, abs=0.03)

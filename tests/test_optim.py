@@ -1,0 +1,58 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, compress_int8,
+                         cosine_schedule, decompress_int8)
+from repro.optim.compression import ef_compress
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(cfg, params, grads, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_caps_global_norm():
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    _, _, metrics = adamw_update(cfg, params, {"w": jnp.full(4, 1e6)}, opt)
+    assert metrics["grad_norm"] > 1e5  # reported pre-clip
+
+
+def test_schedule_warmup_and_decay():
+    assert float(cosine_schedule(0, warmup=10, total=100)) == 0.0
+    assert float(cosine_schedule(10, warmup=10, total=100)) == pytest.approx(1.0)
+    assert float(cosine_schedule(100, warmup=10, total=100)) == pytest.approx(0.1)
+    assert float(cosine_schedule(55, warmup=10, total=100)) < 1.0
+
+
+def test_int8_compression_roundtrip_error():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, scale = compress_int8(g)
+    assert q.dtype == jnp.int8
+    back = decompress_int8(q, scale)
+    err = float(jnp.abs(back - g).max())
+    assert err <= float(scale) + 1e-7  # quantization bound: half-step ≤ scale
+
+
+def test_error_feedback_converges():
+    """With EF, the accumulated compressed sum tracks the true sum."""
+    rng = np.random.default_rng(1)
+    true_sum = np.zeros(64)
+    comp_sum = np.zeros(64)
+    err = jnp.zeros(64)
+    for _ in range(50):
+        g = jnp.asarray(rng.standard_normal(64) * 0.01, jnp.float32)
+        true_sum += np.asarray(g)
+        q, scale, err = ef_compress(g, err)
+        comp_sum += np.asarray(decompress_int8(q, scale))
+    resid = np.abs(true_sum - comp_sum).max()
+    assert resid <= float(jnp.abs(err).max()) + 1e-6  # bounded by the residual
