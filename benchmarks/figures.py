@@ -2,18 +2,23 @@
 
 Each function returns rows of dicts and a CSV-ish summary; run.py drives all
 of them and tees artifacts/bench_results.json for EXPERIMENTS.md.
+
+Op timing comes from DES traces captured off the *real* protocol code running
+over ``SimTransport`` (see benchmarks/schemes_des.py) — the closed-loop layer
+here only replays those traces against the simulated server CPU(s).
 """
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.schemes_des import OPS, erda_read_during_cleaning, \
-    erda_write_during_cleaning, make_sim
+from benchmarks.schemes_des import capture_op_traces, make_sim
 from repro.core import make_store
 from repro.core.layout import HEADER_SIZE, KEY_BYTES
+from repro.fabric import replay_steps
 from repro.netsim import SimParams
 from repro.netsim.sim import ClosedLoopClient
 from repro.workloads import WORKLOADS
@@ -25,27 +30,28 @@ SCHEMES = ("erda", "redo", "raw")
 
 def _run_closed_loop(scheme: str, workload: str, vsize: int, n_threads: int,
                      horizon: float = 0.3, p: SimParams | None = None,
-                     cleaning: bool = False):
+                     cleaning: bool = False, n_shards: int = 1):
     p = p or SimParams()
-    sim, cpu, verbs = make_sim(p)
+    sim, cpus, verbs = make_sim(p, n_shards=n_shards)
     read_frac = WORKLOADS[workload].read_fraction
-    rng = np.random.default_rng(hash((scheme, workload, vsize, n_threads)) & 0xFFFF)
+    # crc32, not hash(): str hashes are salted per process, and benchmark op
+    # sequences must reproduce across runs
+    rng = np.random.default_rng(zlib.crc32(
+        f"{scheme}/{workload}/{vsize}/{n_threads}/{n_shards}".encode()) & 0xFFFF)
+    traces = capture_op_traces(scheme, vsize, p, cleaning=cleaning)
 
-    if cleaning and scheme == "erda":
-        read_op = lambda: erda_read_during_cleaning(verbs, p, vsize)
-        write_op = lambda: erda_write_during_cleaning(verbs, p, vsize)
+    if cleaning:
         # the cleaner itself consumes CPU in the background
         def cleaner_load():
             if sim.now < horizon:
-                verbs.cpu_async(20e-6)
+                cpus[0].request(20e-6, lambda: None)
                 sim.after(50e-6, cleaner_load)
         cleaner_load()
-    else:
-        read_op = lambda: OPS[scheme]["read"](verbs, p, vsize)
-        write_op = lambda: OPS[scheme]["write"](verbs, p, vsize)
 
     def op_factory():
-        return read_op() if rng.random() < read_frac else write_op()
+        cpu = cpus[int(rng.integers(n_shards))] if n_shards > 1 else cpus[0]
+        steps = traces["read"] if rng.random() < read_frac else traces["write"]
+        return replay_steps(steps, cpu)
 
     clients = [ClosedLoopClient(sim, op_factory, horizon) for _ in range(n_threads)]
     for c in clients:
@@ -56,7 +62,7 @@ def _run_closed_loop(scheme: str, workload: str, vsize: int, n_threads: int,
     return {
         "throughput_kops": completed / horizon / 1e3,
         "mean_latency_us": float(np.mean(lat)) * 1e6 if lat else float("nan"),
-        "cpu_busy_s": cpu.busy_seconds,
+        "cpu_busy_s": sum(cpu.busy_seconds for cpu in cpus),
         "completed": completed,
     }
 
@@ -99,8 +105,6 @@ def bench_cpu_cost() -> List[Dict]:
     for vsize in (16, 64, 256, 1024):
         base = {}
         for scheme in SCHEMES:
-            busy = 0.0
-            ops = 0
             for wl in ("ycsb_c", "ycsb_b", "ycsb_a", "update_only"):
                 r = _run_closed_loop(scheme, wl, vsize, n_threads=8)
                 base[(scheme, wl)] = (r["cpu_busy_s"], r["completed"])
@@ -164,4 +168,27 @@ def bench_nvm_writes() -> List[Dict]:
                      "scheme": "erda/redo update ratio",
                      "update": round(measured["erda"][1] / measured["redo"][1], 3),
                      "paper_update": round(paper["erda"][1] / paper["redo"][1], 3)})
+    return rows
+
+
+# ------------------------------------- cluster scaling (beyond the paper: §ROADMAP)
+CLUSTER_THREADS = [8, 16, 32, 64]
+
+
+def bench_cluster_scaling() -> List[Dict]:
+    """Sharded ErdaCluster throughput: CPU-bound paths (writes, baselined
+    against 1 shard) scale with shard count because each shard brings its own
+    server CPU; pure one-sided reads are network-bound either way."""
+    rows = []
+    for wl in ("update_only", "ycsb_a"):
+        for n_shards in (1, 4):
+            per_t = {}
+            for t in CLUSTER_THREADS:
+                r = _run_closed_loop("erda-cluster", wl, 1024, n_threads=t,
+                                     n_shards=n_shards, horizon=0.1)
+                per_t[t] = r["throughput_kops"]
+            rows.append({"figure": "cluster_scaling", "workload": wl,
+                         "n_shards": n_shards,
+                         **{f"t{t}": round(per_t[t], 1) for t in CLUSTER_THREADS},
+                         "avg_kops": round(float(np.mean(list(per_t.values()))), 2)})
     return rows

@@ -53,6 +53,30 @@ def main() -> None:
         print(f"cleaning/{r['workload']},{r['during_cleaning_us']},"
               f"normal={r['normal_us']}us")
 
+    from benchmarks.figures import bench_cluster_scaling
+    rows = bench_cluster_scaling()
+    all_rows += rows
+    for r in rows:
+        us = 1e3 / r["avg_kops"] if r["avg_kops"] else float("nan")
+        print(f"cluster/{r['workload']}/shards{r['n_shards']},{us:.2f},"
+              f"avg={r['avg_kops']}KOp/s t64={r['t64']}KOp/s")
+
+    from repro.core import ServerConfig, make_store
+    from repro.workloads.ycsb import run_store_workload
+    rows = []
+    for scheme, kw in (("erda", {}), ("erda-cluster", {"n_shards": 4})):
+        cfg = ServerConfig(device_size=64 << 20, table_capacity=1 << 13,
+                           n_heads=2, region_size=2 << 20, segment_size=64 << 10)
+        r = run_store_workload(make_store(scheme, cfg=cfg, **kw), "ycsb_b",
+                               n_ops=4000, n_keys=400, value_size=256)
+        r["figure"] = "ycsb_driver"
+        r["scheme"] = scheme
+        rows.append(r)
+        print(f"ycsb_driver/{r['workload']}/{scheme},,"
+              f"reads={r['reads']} writes={r['writes']} "
+              f"one_sided_reads={r['store_stats'].get('one_sided_reads')}")
+    all_rows += rows
+
     rows = bench_nvm_writes()
     all_rows += rows
     for r in rows:

@@ -1,81 +1,105 @@
-"""DES op models for the three schemes (paper §5.1 'Comparisons').
+"""DES op models for the schemes (paper §5.1 'Comparisons') — captured, not
+hand-written.
 
-Each op is a generator over netsim verbs; latency and server-CPU seconds come
-out of the simulator, calibrated against the paper's measured averages (see
-EXPERIMENTS.md §Paper-validation for the side-by-side numbers).
+Earlier revisions duplicated every op as a hand-coded generator over
+``netsim/verbs.py``, so the timed model could silently drift from the
+functional protocol in ``repro.core``.  Now each op's DES step trace is
+*captured from the real code*: the actual ``ErdaClient`` / baseline store
+executes the op over a ``SimTransport`` (repro.fabric), which records, verb by
+verb, the calibrated latency and server-CPU steps that op really performs.
+Closed-loop clients then replay the captured trace through the event loop
+(``replay_steps``), optionally against a sharded cluster's per-shard CPUs.
+
+Latency and server-CPU seconds still come out of the simulator calibrated
+against the paper's measured averages (see EXPERIMENTS.md §Paper-validation).
 """
 from __future__ import annotations
 
-from repro.core.layout import HEADER_SIZE, KEY_BYTES
-from repro.core.hashtable import ENTRY_SIZE, H
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core import ServerConfig, make_store
+from repro.fabric import SimTransport, replay_steps, steps_cpu_s, steps_latency_s
 from repro.netsim import Resource, SimParams, Simulator, Verbs
 
-NEIGHBORHOOD = H * ENTRY_SIZE  # one-sided metadata read size
+#: scaled-down geometry for trace capture (a handful of ops per capture —
+#: the trace only depends on verb sizes, not device capacity)
+_CAPTURE_CFG = ServerConfig(device_size=8 << 20, table_capacity=1 << 10,
+                            n_heads=1, region_size=1 << 20,
+                            segment_size=64 << 10)
+
+_CAPTURE_KEY = 11
+_trace_cache: Dict[Tuple, Dict[str, list]] = {}
 
 
-def record_size(vsize: int) -> int:
-    return HEADER_SIZE + KEY_BYTES + vsize
+def _make_capture_store(scheme: str, p: SimParams):
+    factory = lambda dev: SimTransport(dev, p)
+    if scheme in ("erda", "erda-cluster"):
+        # op traces are shard-local and identical across shards — capture on
+        # one server; the closed-loop layer maps ops onto per-shard CPUs
+        return make_store("erda", cfg=_CAPTURE_CFG, transport_factory=factory)
+    if scheme == "redo":
+        return make_store("redo", device_size=8 << 20, redo_capacity=1 << 20,
+                          transport_factory=factory)
+    if scheme == "raw":
+        return make_store("raw", device_size=8 << 20, ring_capacity=1 << 20,
+                          transport_factory=factory)
+    raise ValueError(f"unknown scheme {scheme!r}")
 
 
-# ------------------------------------------------------------------------ erda
-def erda_read(verbs: Verbs, p: SimParams, vsize: int):
-    yield from verbs.one_sided_read(NEIGHBORHOOD)       # hash-table entry
-    yield from verbs.one_sided_read(record_size(vsize))  # the object
-    yield ("delay", p.crc_s(record_size(vsize)))         # client-side verify
+def capture_op_traces(scheme: str, vsize: int, p: SimParams | None = None,
+                      *, cleaning: bool = False) -> Dict[str, list]:
+    """Run the real store code over SimTransport once and return the captured
+    {"read": steps, "write": steps} DES traces for one op of each kind."""
+    p = p or SimParams()
+    key = (scheme, vsize, cleaning) + dataclasses.astuple(p)
+    hit = _trace_cache.get(key)
+    if hit is not None:
+        return hit
+    store = _make_capture_store(scheme, p)
+    value = b"\xa5" * vsize
+    # warm: create the object and settle the client's size cache so the read
+    # trace is the steady-state two-one-sided-read path
+    store.write(_CAPTURE_KEY, value)
+    store.write(_CAPTURE_KEY, value)
+    if cleaning:
+        if scheme not in ("erda", "erda-cluster"):
+            raise ValueError("cleaning traces only exist for Erda")
+        store.server.start_cleaning(0)  # _CAPTURE_CFG has a single head
+    store.transport.take_steps()
+    got = store.read(_CAPTURE_KEY)  # the measured op — must run even under -O
+    if got != value:
+        raise RuntimeError(f"capture store returned {got!r}")
+    read_steps = store.transport.take_steps()
+    store.write(_CAPTURE_KEY, value)
+    write_steps = store.transport.take_steps()
+    traces = {"read": read_steps, "write": write_steps}
+    _trace_cache[key] = traces
+    return traces
 
 
-def erda_write(verbs: Verbs, p: SimParams, vsize: int):
-    # write_with_imm: server allocates + one 8-byte atomic metadata flip
-    yield from verbs.send_recv(p.t_cpu_erda_alloc_s)
-    # one-sided zero-copy data write to the final log address
-    yield from verbs.one_sided_write(record_size(vsize))
-    yield ("delay", verbs.nvm_write_s(record_size(vsize)))
+def op_latency_us(scheme: str, op: str, vsize: int,
+                  p: SimParams | None = None) -> float:
+    """Uncontended latency of one captured op — the paper-validation number."""
+    return steps_latency_s(capture_op_traces(scheme, vsize, p)[op]) * 1e6
 
 
-def erda_read_during_cleaning(verbs: Verbs, p: SimParams, vsize: int):
-    # §4.4: clients switch to RDMA send; the server resolves offsets
-    yield from verbs.send_recv(p.t_cpu_read_base_s + p.memcpy_s(vsize))
+def op_cpu_us(scheme: str, op: str, vsize: int,
+              p: SimParams | None = None) -> float:
+    """Server-CPU seconds one captured op consumes (incl. async applies)."""
+    return steps_cpu_s(capture_op_traces(scheme, vsize, p)[op]) * 1e6
 
 
-def erda_write_during_cleaning(verbs: Verbs, p: SimParams, vsize: int):
-    yield from verbs.send_recv(p.t_cpu_erda_alloc_s + p.memcpy_s(vsize))
-    yield ("delay", verbs.nvm_write_s(record_size(vsize)))
-
-
-# ------------------------------------------------------------------ baselines
-def baseline_read(verbs: Verbs, p: SimParams, vsize: int):
-    # send → server checks redo log / ring, reads destination, replies
-    yield from verbs.send_recv(p.t_cpu_read_base_s + p.memcpy_s(vsize),
-                               resp_bytes=vsize)
-
-
-def redo_write(verbs: Verbs, p: SimParams, vsize: int):
-    n = KEY_BYTES + vsize
-    # send the record; server CRC-verifies + appends to the redo log
-    yield from verbs.send_recv(p.t_cpu_redo_append_s + p.crc_s(n)
-                               + verbs.nvm_write_s(4 + n), req_bytes=n)
-    # async apply to the destination (second NVM write) — CPU load, not latency
-    verbs.cpu_async(p.t_cpu_apply_s + verbs.nvm_write_s(n))
-
-
-def raw_write(verbs: Verbs, p: SimParams, vsize: int):
-    n = KEY_BYTES + vsize
-    yield from verbs.send_recv(p.t_cpu_raw_alloc_s)      # obtain ring slot
-    yield from verbs.one_sided_write(4 + n)              # push into ring
-    yield from verbs.one_sided_read(4 + n)               # READ AFTER WRITE
-    verbs.cpu_async(p.t_cpu_apply_s + verbs.nvm_write_s(n))  # poll + apply
-
-
-OPS = {
-    "erda": {"read": erda_read, "write": erda_write},
-    "redo": {"read": baseline_read, "write": redo_write},
-    "raw": {"read": baseline_read, "write": raw_write},
-}
-
-
-def make_sim(p: SimParams):
+def make_sim(p: SimParams, n_shards: int = 1):
+    """One Simulator + a server-CPU resource per shard (+ Verbs for ad-hoc
+    processes, bound to shard 0)."""
     sim = Simulator()
-    cpu = Resource(sim, p.server_cores, "server_cpu")
+    cpus = [Resource(sim, p.server_cores, f"server_cpu[{i}]")
+            for i in range(n_shards)]
     from repro.nvmsim import NVMDevice
-    verbs = Verbs(sim, p, cpu, NVMDevice(1 << 20))
-    return sim, cpu, verbs
+    verbs = Verbs(sim, p, cpus[0], NVMDevice(1 << 20))
+    return sim, cpus, verbs
+
+
+__all__ = ["capture_op_traces", "make_sim", "op_cpu_us", "op_latency_us",
+           "replay_steps"]

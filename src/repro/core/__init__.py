@@ -1,17 +1,25 @@
 # The paper's primary contribution: Erda — remote data atomicity via
 # zero-copy log-structured memory, self-verifying objects (CRC), and 8-byte
 # atomic flip-bit metadata.  Baselines (redo logging, read-after-write) live
-# in core.baselines; the NVM/network substrates in repro.nvmsim / repro.netsim.
-from repro.core.api import ALL_SCHEMES, ErdaStore, make_store
+# in core.baselines; the NVM/network substrates in repro.nvmsim / repro.netsim;
+# the pluggable RDMA verb layer in repro.fabric; multi-server sharding in
+# core.cluster.
+from repro.core.api import (ALL_SCHEMES, ALL_STORES, ErdaClusterStore,
+                            ErdaStore, make_store)
 from repro.core.client import ErdaClient
+from repro.core.cluster import ErdaCluster, HashRing
 from repro.core.server import DataLossError, ErdaServer, ServerConfig
 
 __all__ = [
     "ALL_SCHEMES",
+    "ALL_STORES",
     "DataLossError",
     "ErdaClient",
+    "ErdaCluster",
+    "ErdaClusterStore",
     "ErdaServer",
     "ErdaStore",
+    "HashRing",
     "ServerConfig",
     "make_store",
 ]

@@ -1,24 +1,35 @@
-"""Unified KV-store facade over Erda and the two baselines.
+"""Unified KV-store facade over Erda (single-server and sharded cluster) and
+the two baselines.
 
-All three expose read/write/delete plus NVM statistics, so benchmarks and
-property tests run the same op streams against every scheme.
+All stores expose read/write/delete plus NVM statistics, so benchmarks and
+property tests run the same op streams against every scheme.  Each store also
+accepts a ``transport_factory`` so the same code runs over the functional
+``InProcessTransport`` or the DES-timed ``SimTransport``
+(``repro.fabric``).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, List, Optional
 
 from repro.core.baselines.read_after_write import ReadAfterWriteStore
 from repro.core.baselines.redo_logging import RedoLoggingStore
 from repro.core.client import ErdaClient
+from repro.core.cluster import ErdaCluster
 from repro.core.server import ErdaServer, ServerConfig
+from repro.nvmsim.device import NVMDevice
+
+TransportFactory = Callable[[NVMDevice], object]
 
 
 class ErdaStore:
     scheme = "erda"
 
-    def __init__(self, cfg: Optional[ServerConfig] = None):
+    def __init__(self, cfg: Optional[ServerConfig] = None,
+                 transport_factory: Optional[TransportFactory] = None):
         self.server = ErdaServer(cfg or ServerConfig())
-        self.client = ErdaClient(self.server)
+        self.client = ErdaClient(
+            self.server,
+            transport=transport_factory(self.server.dev) if transport_factory else None)
         self.dev = self.server.dev
 
     def write(self, key: int, value: bytes) -> None:
@@ -30,14 +41,88 @@ class ErdaStore:
     def delete(self, key: int) -> None:
         self.client.delete(key)
 
+    def recover(self):
+        """§4.2 crash-recovery scan + metadata repair."""
+        return self.server.recover()
+
+    def compact(self) -> int:
+        """Force the lock-free cleaner over every log head."""
+        from repro.core.cleaning import sweep_server
+        return sweep_server(self.server, force=True)
+
+    def maybe_clean(self) -> int:
+        from repro.core.cleaning import sweep_server
+        return sweep_server(self.server)
+
+    @property
+    def devs(self) -> List[NVMDevice]:
+        return [self.dev]
+
+    @property
+    def transport(self):
+        return self.client.transport
+
     @property
     def stats(self):
         return self.client.stats
 
 
+class ErdaClusterStore:
+    """Store facade over an N-shard ``ErdaCluster`` — same surface as
+    ``ErdaStore`` so every property/benchmark suite runs against both."""
+
+    scheme = "erda-cluster"
+
+    def __init__(self, n_shards: int = 4, cfg: Optional[ServerConfig] = None,
+                 transport_factory: Optional[TransportFactory] = None,
+                 vnodes: int = 64):
+        self.cluster = ErdaCluster(n_shards=n_shards, cfg=cfg,
+                                   transport_factory=transport_factory,
+                                   vnodes=vnodes)
+
+    def write(self, key: int, value: bytes) -> None:
+        self.cluster.write(key, value)
+
+    def read(self, key: int) -> Optional[bytes]:
+        return self.cluster.read(key)
+
+    def delete(self, key: int) -> None:
+        self.cluster.delete(key)
+
+    def recover(self):
+        return self.cluster.recover()
+
+    def recover_shard(self, shard: int):
+        return self.cluster.recover_shard(shard)
+
+    def compact(self) -> int:
+        return self.cluster.compact()
+
+    def maybe_clean(self) -> int:
+        return self.cluster.maybe_clean()
+
+    def shard_for_key(self, key: int) -> int:
+        return self.cluster.shard_for_key(key)
+
+    @property
+    def n_shards(self) -> int:
+        return self.cluster.n_shards
+
+    @property
+    def devs(self) -> List[NVMDevice]:
+        return [s.dev for s in self.cluster.servers]
+
+    @property
+    def stats(self):
+        return self.cluster.stats
+
+
 def make_store(scheme: str, **kwargs):
     if scheme == "erda":
-        return ErdaStore(kwargs.get("cfg"))
+        return ErdaStore(kwargs.get("cfg"),
+                         transport_factory=kwargs.get("transport_factory"))
+    if scheme == "erda-cluster":
+        return ErdaClusterStore(**kwargs)
     if scheme == "redo":
         return RedoLoggingStore(**kwargs)
     if scheme == "raw":
@@ -46,3 +131,4 @@ def make_store(scheme: str, **kwargs):
 
 
 ALL_SCHEMES = ("erda", "redo", "raw")
+ALL_STORES = ("erda", "erda-cluster", "redo", "raw")

@@ -10,14 +10,18 @@ Read path: identical to Redo Logging (two-sided, CPU-served).
 
 NVM byte counts match Table 1's Redo Logging column (ring write = 4+N,
 apply = N, create metadata = Size(key)+8).
+
+Every remote access goes through the injected ``repro.fabric`` transport; see
+redo_logging.py.
 """
 from __future__ import annotations
 
 import struct
 import zlib
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 from repro.core.baselines.redo_logging import _FlatTable
+from repro.fabric.transport import InProcessTransport
 from repro.nvmsim.device import NVMDevice
 
 
@@ -25,8 +29,10 @@ class ReadAfterWriteStore:
     scheme = "raw"
 
     def __init__(self, device_size: int = 256 << 20, table_capacity: int = 1 << 16,
-                 ring_capacity: int = 32 << 20):
+                 ring_capacity: int = 32 << 20,
+                 transport_factory: Optional[Callable[[NVMDevice], object]] = None):
         self.dev = NVMDevice(device_size)
+        self.transport = (transport_factory or InProcessTransport)(self.dev)
         self.table = _FlatTable(self.dev, table_capacity)
         self.ring_base = self.dev.alloc(ring_capacity, align=8)
         self.ring_cap = ring_capacity
@@ -44,18 +50,26 @@ class ReadAfterWriteStore:
         kv = struct.pack("<Q", key) + bytes(value)
         crc = zlib.crc32(kv) & 0xFFFFFFFF
         entry = struct.pack("<I", crc) + kv
-        if self.ring_tail + len(entry) > self.ring_base + self.ring_cap:
-            self.ring_tail = self.ring_base
-        addr = self.ring_tail
-        # one-sided RDMA write into the ring buffer (NVM write #1: 4+N)
+
+        def _alloc():
+            if self.ring_tail + len(entry) > self.ring_base + self.ring_cap:
+                self.ring_tail = self.ring_base
+            addr = self.ring_tail
+            self.ring_tail += (len(entry) + 7) & ~7
+            return addr
+
+        addr = self.transport.send_recv("raw.alloc", _alloc)
+        # one-sided RDMA write into the ring buffer (NVM write #1: 4+N);
+        # persistence is paid for by the forcing read below, not charged here
         self.stats["one_sided_writes"] += 1
-        self.dev.write(addr, entry)
-        self.ring_tail += (len(entry) + 7) & ~7
+        self.transport.one_sided_write(addr, entry, op="raw.ring_push",
+                                       persist=False)
         # one-sided RDMA read-after-write forces persistence (no NVM write)
         self.stats["one_sided_reads"] += 1
-        self.dev.read(addr, len(entry))
+        self.transport.one_sided_read(addr, len(entry), op="raw.raw_read")
         self.pending[key] = bytes(value)
         self._apply(key, value)  # server poll + apply (async in time)
+        self.transport.server_async("raw.apply", len(kv))
 
     def _apply(self, key: int, value: bytes) -> None:
         self.stats["applies"] += 1
@@ -74,19 +88,27 @@ class ReadAfterWriteStore:
     def read(self, key: int) -> Optional[bytes]:
         self.stats["reads"] += 1
         self.stats["send_ops"] += 1
-        if key in self.pending:
-            return self.pending[key]
-        if self.table.get(key) is None:
-            return None
-        addr, _cap = self.dest[key]
-        kv = self.dev.read(addr, self._len[key]).tobytes()
-        return kv[8:]
+
+        def _srv():
+            if key in self.pending:
+                return self.pending[key]
+            if self.table.get(key) is None:
+                return None
+            addr, _cap = self.dest[key]
+            kv = self.dev.read(addr, self._len[key]).tobytes()
+            return kv[8:]
+
+        return self.transport.send_recv("raw.read", _srv)
 
     # ------------------------------------------------------------------ delete
     def delete(self, key: int) -> None:
         self.stats["writes"] += 1
         self.stats["send_ops"] += 1
-        self.table.clear(key)
-        self.dest.pop(key, None)
-        self.pending.pop(key, None)
-        self._len.pop(key, None)
+
+        def _srv():
+            self.table.clear(key)
+            self.dest.pop(key, None)
+            self.pending.pop(key, None)
+            self._len.pop(key, None)
+
+        self.transport.send_recv("raw.delete", _srv)

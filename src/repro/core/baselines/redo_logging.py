@@ -11,14 +11,19 @@ server CPU, which is what caps throughput in Figs 18-21.
 
 Metadata: a flat NVM hash table of [key:u64 | dest_addr:u64] entries
 (create: Size(key)+8 bytes; delete: zeroing both fields, Size(key)+8).
+
+Every remote access goes through the injected ``repro.fabric`` transport, so
+the same code yields functional state (InProcessTransport) or calibrated DES
+latency/CPU accounting (SimTransport).
 """
 from __future__ import annotations
 
 import struct
 import zlib
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 from repro.core.hashtable import splitmix64
+from repro.fabric.transport import InProcessTransport
 from repro.nvmsim.device import NVMDevice
 
 _ENTRY = 16  # key u64 + dest addr u64
@@ -65,8 +70,10 @@ class RedoLoggingStore:
     scheme = "redo"
 
     def __init__(self, device_size: int = 256 << 20, table_capacity: int = 1 << 16,
-                 redo_capacity: int = 32 << 20):
+                 redo_capacity: int = 32 << 20,
+                 transport_factory: Optional[Callable[[NVMDevice], object]] = None):
         self.dev = NVMDevice(device_size)
+        self.transport = (transport_factory or InProcessTransport)(self.dev)
         self.table = _FlatTable(self.dev, table_capacity)
         self.redo_base = self.dev.alloc(redo_capacity, align=8)
         self.redo_cap = redo_capacity
@@ -83,16 +90,22 @@ class RedoLoggingStore:
         kv = struct.pack("<Q", key) + bytes(value)  # the key-value pair (N bytes)
         crc = zlib.crc32(kv) & 0xFFFFFFFF
         entry = struct.pack("<I", crc) + kv
-        # NVM write #1: append to the redo log (4 + N bytes)
-        if self.redo_tail + len(entry) > self.redo_base + self.redo_cap:
-            self.redo_tail = self.redo_base  # ring-style reuse (applied entries)
-        self.dev.write(self.redo_tail, entry)
-        self.redo_tail += (len(entry) + 7) & ~7
-        # server verifies integrity, then applies (asynchronously in time;
-        # synchronously here for functional state)
-        assert zlib.crc32(entry[4:]) & 0xFFFFFFFF == crc
-        self.redo_index[key] = bytes(value)
+
+        def _srv():
+            # NVM write #1: append to the redo log (4 + N bytes)
+            if self.redo_tail + len(entry) > self.redo_base + self.redo_cap:
+                self.redo_tail = self.redo_base  # ring-style reuse (applied entries)
+            self.dev.write(self.redo_tail, entry)
+            self.redo_tail += (len(entry) + 7) & ~7
+            # server verifies integrity before acknowledging
+            assert zlib.crc32(entry[4:]) & 0xFFFFFFFF == crc
+            self.redo_index[key] = bytes(value)
+
+        self.transport.send_recv("redo.write", _srv, req_bytes=len(kv))
+        # async apply to the destination (second NVM write) — CPU load, not
+        # client-visible latency (functional state updated synchronously)
         self._apply(key, value)
+        self.transport.server_async("redo.apply", len(kv))
 
     def _apply(self, key: int, value: bytes) -> None:
         self.stats["applies"] += 1
@@ -113,21 +126,29 @@ class RedoLoggingStore:
     def read(self, key: int) -> Optional[bytes]:
         self.stats["reads"] += 1
         self.stats["send_ops"] += 1
-        if key in self.redo_index:  # server first looks in the redo log
-            return self.redo_index[key]
-        if self.table.get(key) is None:
-            return None
-        addr, _cap = self.dest[key]
-        n = self._len[key]
-        kv = self.dev.read(addr, n).tobytes()
-        return kv[8:]
+
+        def _srv():
+            if key in self.redo_index:  # server first looks in the redo log
+                return self.redo_index[key]
+            if self.table.get(key) is None:
+                return None
+            addr, _cap = self.dest[key]
+            n = self._len[key]
+            kv = self.dev.read(addr, n).tobytes()
+            return kv[8:]
+
+        return self.transport.send_recv("redo.read", _srv)
 
     # ------------------------------------------------------------------ delete
     def delete(self, key: int) -> None:
         self.stats["writes"] += 1
         self.stats["send_ops"] += 1
-        # paper: "sets the metadata in a hash table to 0" (Size(key)+8 bytes)
-        self.table.clear(key)
-        self.dest.pop(key, None)
-        self.redo_index.pop(key, None)
-        self._len.pop(key, None)
+
+        def _srv():
+            # paper: "sets the metadata in a hash table to 0" (Size(key)+8 bytes)
+            self.table.clear(key)
+            self.dest.pop(key, None)
+            self.redo_index.pop(key, None)
+            self._len.pop(key, None)
+
+        self.transport.send_recv("redo.delete", _srv)

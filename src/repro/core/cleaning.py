@@ -38,6 +38,28 @@ def _align8(n: int) -> int:
     return (n + 7) & ~7
 
 
+def sweep_server(server, *, force: bool = False) -> int:
+    """Run the cleaner to completion over every head of one server.
+
+    ``force=False`` honours the occupancy threshold (``maybe_start_cleaning``);
+    ``force=True`` cleans every head not already being cleaned.  Returns the
+    number of heads cleaned — the single sweep used by both the single-server
+    store facade and the cluster's cross-shard coordination."""
+    cleaned = 0
+    for head_id in list(server.log.heads):
+        if force:
+            if head_id in server.cleaners:
+                continue
+            server.start_cleaning(head_id).run_to_completion()
+            cleaned += 1
+        else:
+            c = server.maybe_start_cleaning(head_id)
+            if c is not None:
+                c.run_to_completion()
+                cleaned += 1
+    return cleaned
+
+
 class Cleaner:
     def __init__(self, server, head: Head):
         self.server = server

@@ -11,9 +11,11 @@ Writes are write_with_imm (server does the 8-byte atomic metadata flip and
 returns the tail address) + ONE one-sided data write.  No read-after-write, no
 redo log, no second NVM copy.
 
-In this functional model "one-sided" = the client touches ``server.dev``
-directly without calling server handlers; the DES layer accounts latency/CPU
-separately (benchmarks/schemes_des.py).
+All remote access goes through an injected ``repro.fabric.Transport``: the
+default ``InProcessTransport`` gives the direct-memory functional model, and
+``SimTransport`` makes the *same code path* emit calibrated DES latency and
+server-CPU time (benchmarks/schemes_des.py) — one verb accounting, two
+backends, no drift.
 """
 from __future__ import annotations
 
@@ -23,15 +25,18 @@ from typing import Dict, Optional
 from repro.core import layout
 from repro.core.hashtable import ENTRY_SIZE, H, STATE_VALID
 from repro.core.server import DataLossError, ErdaServer
+from repro.fabric.transport import InProcessTransport, Transport
 from repro.nvmsim.device import TornWrite
 
 
 class ErdaClient:
     INITIAL_READ = 4096  # speculative first object read when size unknown
 
-    def __init__(self, server: ErdaServer, client_id: int = 0):
+    def __init__(self, server: ErdaServer, client_id: int = 0,
+                 transport: Optional[Transport] = None):
         self.server = server
         self.client_id = client_id
+        self.transport = transport or InProcessTransport(server.dev)
         self.size_cache: Dict[int, int] = {}
         # connection establishment: server sends the head array (paper §3.3)
         self.head_array = server.log.head_array()
@@ -39,14 +44,14 @@ class ErdaClient:
                       "one_sided_reads": 0, "one_sided_writes": 0, "send_ops": 0}
 
     # ------------------------------------------------------------- one-sided ops
-    def _os_read(self, addr: int, nbytes: int) -> bytes:
+    def _os_read(self, addr: int, nbytes: int, op: str = "erda.object") -> bytes:
         self.stats["one_sided_reads"] += 1
         nbytes = min(nbytes, self.server.dev.size - addr)
-        return self.server.dev.read(addr, nbytes).tobytes()
+        return self.transport.one_sided_read(addr, nbytes, op=op)
 
     def _os_write(self, addr: int, data: bytes) -> None:
         self.stats["one_sided_writes"] += 1
-        self.server.dev.write(addr, data)
+        self.transport.one_sided_write(addr, data, op="erda.data")
 
     # ------------------------------------------------------------- metadata read
     def _read_entry(self, key: int):
@@ -59,9 +64,9 @@ class ErdaClient:
         raw = b""
         want = H * ENTRY_SIZE
         first = min(want, table.base + table.capacity * ENTRY_SIZE - base)
-        raw = self._os_read(base, first)
+        raw = self._os_read(base, first, op="erda.meta")
         if first < want:
-            raw += self._os_read(table.base, want - first)
+            raw += self._os_read(table.base, want - first, op="erda.meta")
         for i in range(H):
             chunk = raw[i * ENTRY_SIZE : (i + 1) * ENTRY_SIZE]
             if len(chunk) < ENTRY_SIZE:
@@ -77,6 +82,7 @@ class ErdaClient:
     def _read_object(self, key: int, off: int) -> layout.RecordView:
         guess = self.size_cache.get(key, self.INITIAL_READ)
         buf = self._os_read(off, guess)
+        self.transport.client_crc(len(buf))  # client-side verification cost
         rec = layout.parse_record(memoryview_to_np(buf), 0)
         if not rec.ok:
             # maybe the object is just longer than our speculative read: check
@@ -86,6 +92,7 @@ class ErdaClient:
                 claimed = layout.HEADER_SIZE + key_len + (0 if flags & layout.FLAG_DELETE else val_len)
                 if claimed > len(buf) and claimed <= self.server.log.heads[0].segment_size:
                     buf = self._os_read(off, claimed)
+                    self.transport.client_crc(len(buf))
                     rec = layout.parse_record(memoryview_to_np(buf), 0)
         if rec.ok:
             self.size_cache[key] = rec.size
@@ -96,7 +103,8 @@ class ErdaClient:
         if self.server.is_cleaning(key):
             # during cleaning, ops for this head go through RDMA send (§4.4)
             self.stats["send_ops"] += 1
-            return self.server.handle_read(key)
+            return self.transport.send_recv(
+                "erda.read", lambda: self.server.handle_read(key))
         word = self._read_entry(key)
         if word is None or word == 0:
             return None
@@ -111,44 +119,68 @@ class ErdaClient:
         if off_old == layout.NULL_OFF:
             # torn create; tell the server, the object does not exist yet
             self.stats["repairs"] += 1
-            self.stats["send_ops"] += 1
-            self.server.handle_repair(key, word)
+            self._send_repair(key, word)
             return None
         rec_old = self._read_object(key, off_old)
         if rec_old.ok and rec_old.key == key:
             self.stats["repairs"] += 1
-            self.stats["send_ops"] += 1
-            self.server.handle_repair(key, word)
+            self._send_repair(key, word)
             return None if rec_old.deleted else rec_old.value
         raise DataLossError(f"both versions of key {key} unreadable")
+
+    def _send_repair(self, key: int, word: int) -> None:
+        self.stats["send_ops"] += 1
+        self.transport.send_recv(
+            "erda.repair", lambda: self.server.handle_repair(key, word))
 
     # ------------------------------------------------------------- write path
     def write(self, key: int, value: bytes) -> None:
         self.stats["writes"] += 1
+        rec = layout.pack_record(key, value)
         if self.server.is_cleaning(key):
+            # §4.4 send path: the server allocates AND performs the data write
             self.stats["send_ops"] += 1
-            addr, size = self.server.handle_write_req(key, len(value))
-            # during cleaning the server performs the data write itself (send path)
-            self.server.dev.write(addr, layout.pack_record(key, value))
+
+            def _srv():
+                addr, size = self.server.handle_write_req(key, len(value))
+                self.server.dev.write(addr, rec)
+                return addr, size
+
+            addr, size = self.transport.send_recv(
+                "erda.write_cleaning", _srv, req_bytes=len(rec))
+            self.size_cache[key] = size
             self._post_write(key, addr, size)
             return
         self.stats["send_ops"] += 1
-        addr, size = self.server.handle_write_req(key, len(value))  # write_with_imm
-        rec = layout.pack_record(key, value)
+        addr, size = self.transport.write_with_imm(
+            "erda.write_req", lambda: self.server.handle_write_req(key, len(value)))
         self._os_write(addr, rec)  # may raise TornWrite under fault injection
         self.size_cache[key] = size
         self._post_write(key, addr, size)
 
     def delete(self, key: int) -> None:
         self.stats["writes"] += 1
+        rec = layout.pack_record(key, None, delete=True)
         if self.server.is_cleaning(key):
             self.stats["send_ops"] += 1
-            addr, size = self.server.handle_write_req(key, 0, delete=True)
-            self.server.dev.write(addr, layout.pack_record(key, None, delete=True))
-            return
-        self.stats["send_ops"] += 1
-        addr, size = self.server.handle_write_req(key, 0, delete=True)
-        self._os_write(addr, layout.pack_record(key, None, delete=True))
+
+            def _srv():
+                addr, size = self.server.handle_write_req(key, 0, delete=True)
+                self.server.dev.write(addr, rec)
+                return addr, size
+
+            addr, size = self.transport.send_recv(
+                "erda.write_cleaning", _srv, req_bytes=len(rec))
+        else:
+            self.stats["send_ops"] += 1
+            addr, size = self.transport.write_with_imm(
+                "erda.write_req",
+                lambda: self.server.handle_write_req(key, 0, delete=True))
+            self._os_write(addr, rec)
+        # drop the stale size hint: a recreate may be any size, and the cached
+        # live-record size would force the size-miss re-read path needlessly
+        self.size_cache.pop(key, None)
+        self._post_write(key, addr, size)
 
     def _post_write(self, key: int, addr: int, size: int) -> None:
         pass  # hook for tests/telemetry

@@ -1,0 +1,138 @@
+"""ErdaCluster — N ErdaServer shards behind consistent-hash key routing.
+
+Scaling the single-server protocol out: each shard is a full, independent
+``ErdaServer`` (own NVM device, hopscotch table, log heads) with its own
+``ErdaClient`` connection and its own transport, so one-sided reads keep their
+zero-server-CPU property per shard and a shard's failure/recovery is contained
+to that shard.
+
+Key routing uses a consistent-hash ring with virtual nodes: shard ``i`` owns
+``vnodes`` pseudo-random points on the 64-bit ring; a key is served by the
+first point clockwise of ``hash(key)``.  Virtual nodes keep the load spread
+even, and growing the cluster by one shard relocates only ~1/(n+1) of the key
+space — the property that makes online resharding feasible later.
+
+Cluster-wide coordination:
+  * ``recover()``         — run the §4.2 crash-recovery scan on every shard
+                            (or one shard via ``recover_shard``): shards
+                            recover independently, there is no global log.
+  * ``maybe_clean()`` /
+    ``compact()``         — drive the lock-free cleaner across all shards'
+                            heads; cleaning one head on one shard never blocks
+                            traffic to any other shard.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Callable, Dict, List, Optional
+
+from repro.core.client import ErdaClient
+from repro.core.hashtable import splitmix64
+from repro.core.server import ErdaServer, ServerConfig
+from repro.nvmsim.device import NVMDevice
+
+
+class HashRing:
+    """Consistent-hash ring with virtual nodes over the u64 hash space."""
+
+    def __init__(self, n_shards: int, vnodes: int = 64):
+        if n_shards < 1:
+            raise ValueError("cluster needs at least one shard")
+        self.n_shards = n_shards
+        self.vnodes = vnodes
+        points = []
+        for shard in range(n_shards):
+            for v in range(vnodes):
+                points.append((splitmix64((shard << 20) | v), shard))
+        points.sort()
+        self._hashes = [h for h, _ in points]
+        self._shards = [s for _, s in points]
+
+    def shard_for(self, key: int) -> int:
+        h = splitmix64(key ^ 0x5BD1E995)
+        i = bisect.bisect_right(self._hashes, h)
+        if i == len(self._hashes):
+            i = 0  # wrap around the ring
+        return self._shards[i]
+
+
+#: per-shard default — smaller than the single-server default since a cluster
+#: multiplies it by n_shards
+SHARD_CONFIG = ServerConfig(device_size=64 << 20, table_capacity=1 << 14)
+
+
+class ErdaCluster:
+    def __init__(self, n_shards: int = 4, cfg: Optional[ServerConfig] = None,
+                 transport_factory: Optional[Callable[[NVMDevice], object]] = None,
+                 vnodes: int = 64):
+        cfg = cfg or SHARD_CONFIG
+        self.ring = HashRing(n_shards, vnodes)
+        self.servers: List[ErdaServer] = [ErdaServer(cfg) for _ in range(n_shards)]
+        self.clients: List[ErdaClient] = [
+            ErdaClient(s, client_id=i,
+                       transport=transport_factory(s.dev) if transport_factory else None)
+            for i, s in enumerate(self.servers)
+        ]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.servers)
+
+    def shard_for_key(self, key: int) -> int:
+        return self.ring.shard_for(key)
+
+    def client_for_key(self, key: int) -> ErdaClient:
+        return self.clients[self.ring.shard_for(key)]
+
+    # ------------------------------------------------------------------ kv ops
+    def read(self, key: int) -> Optional[bytes]:
+        return self.client_for_key(key).read(key)
+
+    def write(self, key: int, value: bytes) -> None:
+        self.client_for_key(key).write(key, value)
+
+    def delete(self, key: int) -> None:
+        self.client_for_key(key).delete(key)
+
+    # ---------------------------------------------------------------- recovery
+    def recover_shard(self, shard: int) -> Dict[str, int]:
+        """Independent §4.2 recovery of one failed shard; other shards keep
+        serving untouched."""
+        stats = self.servers[shard].recover()
+        # the shard's clients reconnect: size hints may be stale-but-safe
+        # (CRC re-verifies), the head array must be refreshed
+        self.clients[shard].head_array = self.servers[shard].log.head_array()
+        return stats
+
+    def recover(self) -> Dict[str, int]:
+        """Cluster-wide recovery sweep (e.g. after full-site power loss)."""
+        total: Dict[str, int] = {"shards": 0}
+        for shard in range(self.n_shards):
+            for k, v in self.recover_shard(shard).items():
+                total[k] = total.get(k, 0) + v
+            total["shards"] += 1
+        return total
+
+    # ---------------------------------------------------------------- cleaning
+    def maybe_clean(self) -> int:
+        """Start + run cleaning on every head over threshold, on every shard."""
+        from repro.core.cleaning import sweep_server
+        return sum(sweep_server(s) for s in self.servers)
+
+    def compact(self) -> int:
+        """Force-clean every head of every shard (page eviction / GC sweep)."""
+        from repro.core.cleaning import sweep_server
+        return sum(sweep_server(s, force=True) for s in self.servers)
+
+    # ------------------------------------------------------------------- stats
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Aggregated client op counters across all shards."""
+        total: Dict[str, int] = {}
+        for c in self.clients:
+            for k, v in c.stats.items():
+                total[k] = total.get(k, 0) + v
+        return total
+
+    def keys_per_shard(self) -> List[int]:
+        return [s.table.n_items for s in self.servers]

@@ -1,0 +1,20 @@
+# The pluggable RDMA transport seam: all remote access in repro.core goes
+# through a Transport (five verbs).  InProcessTransport = functional model;
+# SimTransport = same semantics + calibrated DES timing steps.
+from repro.fabric.transport import (MSG_BYTES, VERBS, InProcessTransport,
+                                    OpRecord, Transport, make_transport)
+from repro.fabric.sim import (SimTransport, replay_steps, steps_cpu_s,
+                              steps_latency_s)
+
+__all__ = [
+    "MSG_BYTES",
+    "VERBS",
+    "InProcessTransport",
+    "OpRecord",
+    "SimTransport",
+    "Transport",
+    "make_transport",
+    "replay_steps",
+    "steps_cpu_s",
+    "steps_latency_s",
+]

@@ -1,0 +1,147 @@
+"""SimTransport — the DES-timed transport backend.
+
+Functionally identical to ``InProcessTransport`` (it executes every verb, so
+the *real* ``ErdaClient`` / baseline store code runs over it unchanged), but
+every primitive additionally appends calibrated timing steps:
+
+    ("delay", seconds)       client-observed latency (network, NVM persist,
+                             client-side CRC verification)
+    ("cpu", seconds)         server CPU service the op *waits* for — replayed
+                             as a FIFO acquire of the server-CPU resource, so
+                             two-sided ops queue when the CPU saturates
+    ("cpu_async", seconds)   background server work (e.g. applying a redo
+                             entry) — consumes CPU capacity, does not block
+
+The per-op CPU service-time table lives in ``_service`` — ONE place, keyed by
+protocol op label, calibrated against the paper's measured averages exactly as
+``netsim.verbs`` documents (one-sided RTT ≈ 30 µs → Erda read ≈ 62 µs;
+two-sided read service ≈ 55-60 µs → baseline read ≈ 92 µs).
+
+``benchmarks/schemes_des.py`` captures each op's step trace by running the
+real store code once, then replays the trace through the event loop for every
+closed-loop iteration (``replay_steps``).  The steps are resource-agnostic so
+a sharded cluster can replay the same trace against *its* shard's CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Generator, List, Optional, Tuple
+
+from repro.fabric.transport import MSG_BYTES, InProcessTransport
+from repro.netsim.sim import Resource
+from repro.netsim.verbs import SimParams
+from repro.nvmsim.device import NVMDevice
+
+Step = Tuple[str, float]  # ("delay"|"cpu"|"cpu_async", seconds)
+
+
+class SimTransport(InProcessTransport):
+    def __init__(self, dev: NVMDevice, params: Optional[SimParams] = None, *,
+                 trace: bool = False):
+        super().__init__(dev, trace=trace)
+        self.p = params or SimParams()
+        self.steps: List[Step] = []
+
+    def take_steps(self) -> List[Step]:
+        s, self.steps = self.steps, []
+        return s
+
+    # ------------------------------------------------------- CPU service table
+    def _service(self, op: str, req_bytes: int, resp_bytes: int) -> float:
+        """Server-CPU seconds for a two-sided op — the single calibration point
+        for every scheme's CPU involvement."""
+        p = self.p
+        if op == "erda.write_req":        # alloc + one 8-byte atomic meta flip
+            return p.t_cpu_erda_alloc_s
+        if op == "erda.write_cleaning":   # §4.4 send path: server copies + persists
+            return (p.t_cpu_erda_alloc_s + p.memcpy_s(req_bytes)
+                    + self.dev.write_latency_s(req_bytes))
+        if op == "erda.read":             # §4.4 send path read
+            return p.t_cpu_read_base_s + p.memcpy_s(resp_bytes)
+        if op == "erda.repair":           # one lookup + one atomic store
+            return p.t_cpu_hash_s
+        if op == "redo.write":            # receive, CRC-verify, append to redo log
+            return (p.t_cpu_redo_append_s + p.crc_s(req_bytes)
+                    + self.dev.write_latency_s(4 + req_bytes))
+        if op == "raw.alloc":             # hand out a ring-buffer slot
+            return p.t_cpu_raw_alloc_s
+        if op in ("redo.read", "raw.read"):  # lookup + copy + post response
+            return p.t_cpu_read_base_s + p.memcpy_s(resp_bytes)
+        if op in ("redo.apply", "raw.apply"):  # background apply to destination
+            return p.t_cpu_apply_s + self.dev.write_latency_s(req_bytes)
+        return p.t_cpu_hash_s             # metadata-only ops (e.g. deletes)
+
+    # ----------------------------------------------------------- one-sided ops
+    def one_sided_read(self, addr: int, nbytes: int, *, op: str = "") -> bytes:
+        out = super().one_sided_read(addr, nbytes, op=op)
+        self.steps.append(("delay", self.p.t_one_sided_s + self.p.xfer_s(nbytes)))
+        return out
+
+    def one_sided_write(self, addr: int, data: bytes, *, op: str = "",
+                        persist: bool = True) -> None:
+        n = len(data)
+        # network leg first; NVM persist after (ACK ≠ persistent, but the
+        # paper's latency model charges the media write on the client's path).
+        # Callers that force persistence separately — RAW's read-after-write —
+        # pass persist=False so the media write is not double-counted.
+        self.steps.append(("delay", self.p.t_one_sided_s + self.p.xfer_s(n)))
+        super().one_sided_write(addr, data, op=op, persist=persist)
+        if persist:
+            self.steps.append(("delay", self.dev.write_latency_s(n)))
+
+    def atomic_word_write(self, addr: int, word: int, *, op: str = "") -> None:
+        super().atomic_word_write(addr, word, op=op)
+        self.steps.append(("delay", self.p.t_one_sided_s + self.p.xfer_s(8)))
+
+    # ----------------------------------------------------------- two-sided ops
+    def _two_sided(self, op: str, handler: Callable[[], Any], req_bytes: int,
+                   resp_bytes: Optional[int]) -> Any:
+        result = handler()
+        if resp_bytes is None:  # measure the response payload when not forced
+            resp_bytes = len(result) if isinstance(result, (bytes, bytearray)) \
+                else MSG_BYTES
+        p = self.p
+        self.steps.append(("delay", p.t_half_rtt_s + p.xfer_s(req_bytes)))
+        self.steps.append(("cpu", p.t_cpu_poll_s
+                           + self._service(op, req_bytes, resp_bytes)))
+        self.steps.append(("delay", p.t_half_rtt_s + p.xfer_s(resp_bytes)))
+        return result
+
+    def write_with_imm(self, op: str, handler: Callable[[], Any], *,
+                       req_bytes: int = MSG_BYTES) -> Any:
+        self._note("write_with_imm", op, req_bytes)
+        return self._two_sided(op, handler, req_bytes, MSG_BYTES)
+
+    def send_recv(self, op: str, handler: Callable[[], Any], *,
+                  req_bytes: int = MSG_BYTES,
+                  resp_bytes: Optional[int] = None) -> Any:
+        self._note("send_recv", op, req_bytes)
+        return self._two_sided(op, handler, req_bytes, resp_bytes)
+
+    # ------------------------------------------------------------ timing hooks
+    def client_crc(self, nbytes: int) -> None:
+        self.steps.append(("delay", self.p.crc_s(nbytes)))
+
+    def server_async(self, op: str, nbytes: int) -> None:
+        self.steps.append(("cpu_async", self._service(op, nbytes, 0)))
+
+
+# --------------------------------------------------------------------- replay
+def replay_steps(steps: List[Step], cpu: Resource) -> Generator:
+    """Turn a captured step trace into a DES op process bound to `cpu`."""
+    for kind, s in steps:
+        if kind == "delay":
+            yield ("delay", s)
+        elif kind == "cpu":
+            yield ("acquire", cpu, s)
+        else:  # cpu_async: background load, no wait
+            cpu.request(s, lambda: None)
+
+
+def steps_latency_s(steps: List[Step]) -> float:
+    """Uncontended latency of a step trace (queueing-free lower bound)."""
+    return sum(s for kind, s in steps if kind != "cpu_async")
+
+
+def steps_cpu_s(steps: List[Step]) -> float:
+    """Server-CPU seconds a step trace consumes (incl. background work)."""
+    return sum(s for kind, s in steps if kind in ("cpu", "cpu_async"))

@@ -1,0 +1,145 @@
+"""The pluggable RDMA transport seam (the verb layer of the paper).
+
+The paper's performance argument is entirely about *which verb carries each
+byte*: one-sided reads/writes cost only network time, while two-sided sends
+queue on the server CPU.  Every remote access the protocol performs therefore
+goes through a ``Transport`` exposing the five RDMA primitives Erda uses:
+
+  * ``one_sided_read``     — RDMA READ, no server CPU
+  * ``one_sided_write``    — RDMA WRITE, no server CPU (ACK = NIC cache, §1)
+  * ``write_with_imm``     — RDMA WRITE WITH IMM: the metadata leg of a write;
+                             the server CPU runs a small handler
+  * ``send_recv``          — two-sided SEND/RECV RPC, served by the server CPU
+  * ``atomic_word_write``  — 8-byte remote atomic store (the paper's
+                             atomicity unit, §2.2)
+
+Two backends implement the protocol:
+
+  * ``InProcessTransport`` (here) — direct-memory semantics, zero overhead;
+    what all functional tests run on.
+  * ``SimTransport`` (``repro.fabric.sim``) — same functional semantics, but
+    every verb additionally emits calibrated DES timing steps, so the *real*
+    client/baseline code produces the latency / server-CPU numbers for the
+    paper-validation benchmarks.  No hand-duplicated op models.
+
+Both backends meter per-verb counts (``counts``) and, when ``trace=True``,
+record an op-for-op ``OpRecord`` trace — the hook the verb-count parity tests
+use to assert the functional model and the timed model cannot drift.
+
+Two-sided ops take the *handler thunk* directly instead of going through a
+wire format: the op label (e.g. ``"erda.write_req"``) identifies the RPC for
+accounting and for the SimTransport's per-op CPU service-time table, while the
+thunk performs the server-side state change in process.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Protocol, runtime_checkable
+
+from repro.nvmsim.device import NVMDevice
+
+#: the five RDMA primitives of the protocol (order = paper presentation order)
+VERBS = ("one_sided_read", "one_sided_write", "write_with_imm", "send_recv",
+         "atomic_word_write")
+
+#: default wire size of a two-sided request/response descriptor (bytes)
+MSG_BYTES = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class OpRecord:
+    """One verb execution: which primitive, which protocol op, how many bytes."""
+    verb: str
+    op: str
+    nbytes: int
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """The five RDMA primitives every store issues its remote access through."""
+
+    def one_sided_read(self, addr: int, nbytes: int, *, op: str = "") -> bytes: ...
+
+    def one_sided_write(self, addr: int, data: bytes, *, op: str = "",
+                        persist: bool = True) -> None: ...
+
+    def write_with_imm(self, op: str, handler: Callable[[], Any], *,
+                       req_bytes: int = MSG_BYTES) -> Any: ...
+
+    def send_recv(self, op: str, handler: Callable[[], Any], *,
+                  req_bytes: int = MSG_BYTES,
+                  resp_bytes: Optional[int] = None) -> Any: ...
+
+    def atomic_word_write(self, addr: int, word: int, *, op: str = "") -> None: ...
+
+
+class InProcessTransport:
+    """Direct-memory transport: the functional-model backend.
+
+    Executes every primitive against the target NVM device / server handler
+    with zero overhead, while metering verb counts (and optionally a full op
+    trace) so tests can assert the protocol's verb footprint.
+    """
+
+    def __init__(self, dev: NVMDevice, *, trace: bool = False):
+        self.dev = dev
+        self.counts: Dict[str, int] = {v: 0 for v in VERBS}
+        self.trace_enabled = trace
+        self.trace: List[OpRecord] = []
+
+    # ------------------------------------------------------------- bookkeeping
+    def _note(self, verb: str, op: str, nbytes: int) -> None:
+        self.counts[verb] += 1
+        if self.trace_enabled:
+            self.trace.append(OpRecord(verb, op, nbytes))
+
+    def take_trace(self) -> List[OpRecord]:
+        t, self.trace = self.trace, []
+        return t
+
+    # --------------------------------------------------------------- one-sided
+    def one_sided_read(self, addr: int, nbytes: int, *, op: str = "") -> bytes:
+        self._note("one_sided_read", op, nbytes)
+        return self.dev.read(addr, nbytes).tobytes()
+
+    def one_sided_write(self, addr: int, data: bytes, *, op: str = "",
+                        persist: bool = True) -> None:
+        """``persist=False`` when the scheme pays for persistence elsewhere
+        (e.g. RAW's forcing read) — only the sim backend's latency model cares."""
+        self._note("one_sided_write", op, len(data))
+        self.dev.write(addr, data)  # may raise TornWrite under fault injection
+
+    def atomic_word_write(self, addr: int, word: int, *, op: str = "") -> None:
+        self._note("atomic_word_write", op, 8)
+        self.dev.write_u64_atomic(addr, word)
+
+    # --------------------------------------------------------------- two-sided
+    def write_with_imm(self, op: str, handler: Callable[[], Any], *,
+                       req_bytes: int = MSG_BYTES) -> Any:
+        self._note("write_with_imm", op, req_bytes)
+        return handler()
+
+    def send_recv(self, op: str, handler: Callable[[], Any], *,
+                  req_bytes: int = MSG_BYTES,
+                  resp_bytes: Optional[int] = None) -> Any:
+        self._note("send_recv", op, req_bytes)
+        return handler()
+
+    # ------------------------------------------------- non-verb timing hooks
+    # These carry no bytes over the fabric; the sim backend turns them into
+    # client-compute delays / background server-CPU load.
+    def client_crc(self, nbytes: int) -> None:
+        pass
+
+    def server_async(self, op: str, nbytes: int) -> None:
+        pass
+
+
+def make_transport(kind: str, dev: NVMDevice, **kwargs):
+    """Transport factory: ``"inproc"`` or ``"sim"``."""
+    if kind == "inproc":
+        return InProcessTransport(dev, **kwargs)
+    if kind == "sim":
+        from repro.fabric.sim import SimTransport
+        return SimTransport(dev, **kwargs)
+    raise ValueError(f"unknown transport kind {kind!r}")

@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import heapq
 import math
-from typing import Callable, Generator, List, Optional, Tuple
+from collections import deque
+from typing import Callable, Deque, Generator, List, Optional, Tuple
 
 Step = Tuple  # ("delay", s) | ("acquire", Resource, s)
 
@@ -55,7 +56,9 @@ class Resource:
         self.workers = workers
         self.name = name
         self._free = workers
-        self._queue: List[Tuple[float, Callable[[], None]]] = []
+        # deque: the FIFO is popped from the front on every service completion,
+        # which is the hot path of a saturated-CPU run (list.pop(0) is O(n))
+        self._queue: Deque[Tuple[float, Callable[[], None]]] = deque()
         self.busy_seconds = 0.0
         self.completed = 0
 
@@ -73,7 +76,7 @@ class Resource:
             self.completed += 1
             done()
             if self._queue:
-                s, d = self._queue.pop(0)
+                s, d = self._queue.popleft()
                 self._start(s, d)
             else:
                 self._free += 1

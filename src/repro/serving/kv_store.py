@@ -3,7 +3,13 @@
 Decode-time KV pages / SSM state snapshots are Erda objects: appended with one
 one-sided write each, page-table entries are the 8-byte atomic words, and a
 preempted host's torn page is detected by CRC at fetch and falls back to the
-previous snapshot.  The log cleaner doubles as page eviction/compaction."""
+previous snapshot.  The log cleaner doubles as page eviction/compaction.
+
+The store behind the page interface is pluggable: by default pages are sharded
+across an ``ErdaCluster`` (consistent-hash key routing spreads sequences over
+shards, so page traffic scales with shard count and a preempted shard recovers
+independently); pass any ``make_store(...)`` object to override — e.g. a
+single ``ErdaStore`` for the smallest deployments."""
 from __future__ import annotations
 
 from typing import Optional
@@ -12,8 +18,13 @@ import jax
 import numpy as np
 
 from repro.checkpoint.serialization import leaf_from_bytes, leaf_to_bytes
-from repro.core import ErdaStore, ServerConfig
+from repro.core import ServerConfig, make_store
 from repro.core.hashtable import splitmix64
+
+#: per-shard geometry for the default serving cluster
+PAGE_SHARD_CONFIG = ServerConfig(device_size=256 << 20, table_capacity=1 << 14,
+                                 n_heads=4, region_size=16 << 20,
+                                 segment_size=4 << 20)
 
 
 def _page_key(seq_id: int, name: str, idx: int) -> int:
@@ -21,10 +32,9 @@ def _page_key(seq_id: int, name: str, idx: int) -> int:
 
 
 class ErdaKVPageStore:
-    def __init__(self, store: Optional[ErdaStore] = None):
-        self.store = store or ErdaStore(ServerConfig(
-            device_size=512 << 20, table_capacity=1 << 14,
-            n_heads=4, region_size=16 << 20, segment_size=4 << 20))
+    def __init__(self, store=None, *, n_shards: int = 2):
+        self.store = store or make_store("erda-cluster", n_shards=n_shards,
+                                         cfg=PAGE_SHARD_CONFIG)
 
     def put_page(self, seq_id: int, name: str, idx: int, array) -> None:
         self.store.write(_page_key(seq_id, name, idx), leaf_to_bytes(array))
@@ -56,8 +66,6 @@ class ErdaKVPageStore:
             jax.tree_util.tree_structure(template), out)
 
     def compact(self) -> None:
-        """Page eviction/compaction = the paper's lock-free log cleaning."""
-        for head_id in list(self.store.server.log.heads):
-            c = self.store.server.maybe_start_cleaning(head_id)
-            if c is not None:
-                c.run_to_completion()
+        """Page eviction/compaction = the paper's lock-free log cleaning,
+        swept across every shard of the backing store."""
+        self.store.maybe_clean()

@@ -61,3 +61,35 @@ WORKLOADS = {
 
 def make_ops(workload: str, n_ops: int, n_keys: int, seed: int = 0):
     return WORKLOADS[workload].ops(n_ops, n_keys, seed)
+
+
+# --------------------------------------------------------------- store driver
+def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
+                       value_size: int = 128, seed: int = 0) -> dict:
+    """Drive any ``make_store(...)`` object (single-server Erda, sharded
+    ``erda-cluster``, or a baseline) with a YCSB op stream, checking every
+    read against a dict model.  Returns op counts + the store's own stats —
+    the functional-side companion of the DES benchmarks."""
+    ops = make_ops(workload, n_ops, n_keys, seed)
+    rng = np.random.default_rng(seed + 2)
+    model = {}
+    # load phase: every key gets an initial value (YCSB's load stage)
+    for k in range(n_keys):
+        v = rng.bytes(value_size)
+        store.write(k + 1, v)  # keys are 1-based: 0 is the empty-slot sentinel
+        model[k + 1] = v
+    n_reads = n_writes = 0
+    for op, k in ops:
+        k += 1
+        if op == "read":
+            n_reads += 1
+            got = store.read(k)
+            assert got == model.get(k), f"driver mismatch on key {k}"
+        else:
+            n_writes += 1
+            v = rng.bytes(value_size)
+            store.write(k, v)
+            model[k] = v
+    return {"workload": workload, "n_ops": len(ops), "n_keys": n_keys,
+            "reads": n_reads, "writes": n_writes,
+            "store_stats": dict(store.stats)}

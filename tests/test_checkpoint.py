@@ -10,6 +10,8 @@ import pytest
 from repro.checkpoint import ErdaCheckpointManager
 from repro.core import ErdaStore, ServerConfig
 
+pytestmark = pytest.mark.slow  # JAX model/train lane; excluded from tier-1
+
 
 def small_state(seed=0, scale=1.0):
     k = jax.random.PRNGKey(seed)

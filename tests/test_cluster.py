@@ -1,0 +1,177 @@
+"""ErdaCluster: consistent-hash key routing, the single-server property suite
+over N shards, and independent per-shard crash recovery."""
+import numpy as np
+import pytest
+
+from repro.core import ErdaCluster, HashRing, ServerConfig, make_store
+from repro.nvmsim.device import TornWrite
+
+CFG = ServerConfig(device_size=16 << 20, table_capacity=1 << 10,
+                   n_heads=2, region_size=1 << 20, segment_size=32 << 10)
+
+
+def cluster_store(n_shards=4):
+    return make_store("erda-cluster", n_shards=n_shards, cfg=CFG)
+
+
+# ------------------------------------------------------------------- routing
+def test_ring_routing_is_deterministic_and_total():
+    ring = HashRing(4)
+    for key in range(1, 2000):
+        s = ring.shard_for(key)
+        assert 0 <= s < 4
+        assert ring.shard_for(key) == s
+
+
+def test_keys_distribute_across_all_shards():
+    s = cluster_store(4)
+    n_keys = 400
+    for k in range(1, n_keys + 1):
+        s.write(k, bytes([k % 256]) * 16)
+    per_shard = s.cluster.keys_per_shard()
+    assert sum(per_shard) == n_keys
+    assert all(n > 0 for n in per_shard), per_shard
+    # virtual nodes keep the spread sane: no shard owns > 60% of the space
+    assert max(per_shard) < 0.6 * n_keys
+    # and routing agrees with placement: each key's value lives on its shard
+    for k in (1, 17, 101, 399):
+        shard = s.shard_for_key(k)
+        assert s.cluster.servers[shard].table.lookup(k) is not None
+
+
+def test_adding_a_shard_moves_only_a_fraction_of_keys():
+    """The consistent-hashing property that makes resharding cheap."""
+    r4, r5 = HashRing(4), HashRing(5)
+    keys = range(1, 4001)
+    moved = sum(1 for k in keys if r4.shard_for(k) != r5.shard_for(k))
+    assert moved / 4000 < 0.45  # ~1/5 expected; << full reshuffle
+
+
+# --------------------------------------------------------- property parity
+def test_cluster_basic_ops():
+    s = cluster_store()
+    s.write(1, b"one")
+    s.write(2, b"two")
+    assert s.read(1) == b"one" and s.read(2) == b"two"
+    s.write(1, b"uno")
+    assert s.read(1) == b"uno"
+    s.delete(2)
+    assert s.read(2) is None
+    assert s.read(3) is None
+    s.write(2, b"again")
+    assert s.read(2) == b"again"
+
+
+def test_cluster_matches_dict_model_random_workload():
+    rng = np.random.default_rng(7)
+    s = cluster_store()
+    model = {}
+    for _ in range(1500):
+        k = int(rng.integers(1, 64))
+        r = rng.random()
+        if r < 0.5:
+            assert s.read(k) == model.get(k), f"key {k}"
+        elif r < 0.9 or k not in model:
+            v = rng.bytes(int(rng.integers(1, 300)))
+            s.write(k, v)
+            model[k] = v
+        else:
+            s.delete(k)
+            model.pop(k, None)
+    # deleted keys keep a (tombstoned) table entry until cleaning compacts them
+    assert sum(s.cluster.keys_per_shard()) >= len(model)
+
+
+def test_cluster_stats_aggregate_and_reads_stay_one_sided():
+    s = cluster_store()
+    for k in range(1, 50):
+        s.write(k, b"x" * 64)
+    before = s.stats["send_ops"]
+    for k in range(1, 50):
+        assert s.read(k) == b"x" * 64
+    assert s.stats["send_ops"] == before          # zero server CPU on reads
+    assert s.stats["one_sided_reads"] >= 2 * 49   # 2 one-sided reads per read
+
+
+def test_cluster_cleaning_preserves_contents():
+    s = cluster_store()
+    model = {}
+    for k in range(1, 120):
+        v = bytes([k % 256]) * (k % 61 + 1)
+        s.write(k, v)
+        s.write(k, v[::-1])
+        model[k] = v[::-1]
+    assert s.compact() == sum(len(srv.log.heads) for srv in s.cluster.servers)
+    for k, v in model.items():
+        assert s.read(k) == v
+
+
+# ------------------------------------------------------------- shard failure
+def torn_update(s, shard_dev, key, value, *, created: bool):
+    """Crash a client mid-one-sided-write on one shard (cf. test_recovery)."""
+    shard_dev.fault.arm(countdown=0 if created else 2, fraction=0.5)
+    with pytest.raises(TornWrite):
+        s.write(key, value)
+
+
+def test_one_shard_fails_and_recovers_independently():
+    s = cluster_store(4)
+    payload = {k: bytes([k % 251]) * (k % 120 + 1) for k in range(1, 80)}
+    for k, v in payload.items():
+        s.write(k, v)
+    # pick a victim key and tear the data write on ITS shard only
+    victim = 17
+    shard = s.shard_for_key(victim)
+    torn_update(s, s.devs[shard], victim, b"torn-update-on-one-shard",
+                created=True)
+    other = [i for i in range(4) if i != shard]
+    snapshots = [s.devs[i].stats.snapshot() for i in range(4)]
+
+    stats = s.recover_shard(shard)  # only the failed shard runs recovery
+    assert stats["repaired"] == 1
+    # untouched shards saw zero recovery traffic
+    for i in other:
+        assert s.devs[i].stats.delta(snapshots[i]).write_ops == 0
+    # every key — on the failed shard and elsewhere — reads back consistently
+    for k, v in payload.items():
+        assert s.read(k) == v
+
+
+def test_cluster_wide_recovery_sweep():
+    s = cluster_store(3)
+    for k in range(1, 60):
+        s.write(k, bytes([k]) * 32)
+    # tear writes on two different shards
+    torn = []
+    for victim in (5, 6):
+        torn.append(victim)
+        shard_dev = s.devs[s.shard_for_key(victim)]
+        torn_update(s, shard_dev, victim, b"torn!" * 8, created=True)
+    stats = s.recover()
+    assert stats["shards"] == 3
+    assert stats["repaired"] == 2
+    for k in range(1, 60):
+        assert s.read(k) == bytes([k]) * 32
+
+
+def test_torn_create_on_shard_is_removed_by_recovery():
+    s = cluster_store(2)
+    s.write(1, b"anchor")
+    shard = s.shard_for_key(999)
+    torn_update(s, s.devs[shard], 999, b"never-existed", created=False)
+    stats = s.recover_shard(shard)
+    assert stats["removed"] == 1
+    assert s.read(999) is None and s.read(1) == b"anchor"
+    s.write(999, b"second try")
+    assert s.read(999) == b"second try"
+
+
+# ----------------------------------------------------------- YCSB driver
+def test_ycsb_driver_runs_single_and_sharded():
+    from repro.workloads.ycsb import run_store_workload
+    for scheme, kw in (("erda", {"cfg": CFG}),
+                       ("erda-cluster", {"n_shards": 4, "cfg": CFG})):
+        r = run_store_workload(make_store(scheme, **kw), "ycsb_b",
+                               n_ops=600, n_keys=80, value_size=64)
+        assert r["reads"] + r["writes"] == 600
+        assert r["store_stats"]["one_sided_reads"] > 0

@@ -11,6 +11,8 @@ from repro.kernels import ops, ref
 from repro.kernels.crc32 import crc32_pallas, make_table
 from repro.kernels.flash_attention import flash_attention_pallas
 
+pytestmark = pytest.mark.slow  # JAX model/train lane; excluded from tier-1
+
 
 # ---------------------------------------------------------------------- crc32
 def test_table_matches_zlib_single_bytes():

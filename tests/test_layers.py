@@ -13,6 +13,8 @@ from repro.models.layers import rwkv as R
 from repro.models.layers import ssm as S
 from repro.models.layers.moe import apply_moe, capacity, init_moe
 
+pytestmark = pytest.mark.slow  # JAX model/train lane; excluded from tier-1
+
 
 def f32cfg(arch, **kw):
     cfg = get_config(arch).scaled_down()

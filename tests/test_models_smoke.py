@@ -11,6 +11,8 @@ from repro.data import make_batch
 from repro.models import get_model
 from repro.configs.base import ShapeConfig
 
+pytestmark = pytest.mark.slow  # JAX model/train lane; excluded from tier-1
+
 SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
 
 

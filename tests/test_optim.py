@@ -7,6 +7,8 @@ from repro.optim import (AdamWConfig, adamw_init, adamw_update, compress_int8,
                          cosine_schedule, decompress_int8)
 from repro.optim.compression import ef_compress
 
+pytestmark = pytest.mark.slow  # JAX model/train lane; excluded from tier-1
+
 
 def test_adamw_descends_quadratic():
     params = {"w": jnp.asarray([5.0, -3.0])}

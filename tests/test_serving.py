@@ -13,6 +13,8 @@ from repro.data import make_batch
 from repro.models import get_model
 from repro.serving import ErdaKVPageStore, ServeEngine
 
+pytestmark = pytest.mark.slow  # JAX model/train lane; excluded from tier-1
+
 
 def setup(arch="olmo_1b"):
     cfg = dataclasses.replace(get_config(arch).scaled_down(), dtype="float32")
