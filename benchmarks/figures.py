@@ -15,7 +15,10 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.schemes_des import capture_op_traces, make_sim
+from benchmarks.schemes_des import (batched_latency_us, capture_batch_traces,
+                                    capture_cluster_batch_traces,
+                                    capture_op_traces, make_sim,
+                                    op_latency_us, overlapped_latency_us)
 from repro.core import make_store
 from repro.core.layout import HEADER_SIZE, KEY_BYTES
 from repro.fabric import replay_steps
@@ -168,6 +171,50 @@ def bench_nvm_writes() -> List[Dict]:
                      "scheme": "erda/redo update ratio",
                      "update": round(measured["erda"][1] / measured["redo"][1], 3),
                      "paper_update": round(paper["erda"][1] / paper["redo"][1], 3)})
+    return rows
+
+
+# ---------------------- doorbell batching (beyond the paper: §ROADMAP async)
+BATCH_SIZES = [1, 2, 4, 8, 16]
+
+
+def bench_batching() -> List[Dict]:
+    """Amortized per-op latency and throughput vs batch size, from DES traces
+    of the real ``multi_read``/``multi_write`` client code.  Expected: Erda
+    multi_read pays the two one-sided RTTs once per BATCH (2 doorbells), so at
+    batch ≥ 8 its per-op latency drops under 60% of the sequential per-op
+    latency; the baselines amortize only network legs — their per-op CPU
+    service does not batch away."""
+    rows = []
+    vsize = 1024
+    for scheme in SCHEMES:
+        for op in ("read", "write"):
+            seq_us = op_latency_us(scheme, op, vsize)
+            per_b = {}
+            for b in BATCH_SIZES:
+                lat = batched_latency_us(scheme, op, vsize, b)
+                # throughput of one closed-loop client issuing whole batches
+                per_b[b] = {"us": lat, "kops": 1e3 / lat if lat else 0.0}
+            rows.append({
+                "figure": "batching", "scheme": scheme, "op": op,
+                "value_size": vsize, "seq_us": round(seq_us, 2),
+                **{f"b{b}": round(per_b[b]["us"], 2) for b in BATCH_SIZES},
+                **{f"kops_b{b}": round(per_b[b]["kops"], 1) for b in BATCH_SIZES},
+                "amortized_ratio_b8": round(per_b[8]["us"] / seq_us, 3),
+            })
+    # sharded cluster: per-shard sub-batches replayed as CONCURRENT processes
+    for op in ("read", "write"):
+        seq_us = op_latency_us("erda", op, vsize)
+        per_b = {}
+        for b in BATCH_SIZES:
+            traces = capture_cluster_batch_traces(vsize, b, n_shards=4)
+            per_b[b] = overlapped_latency_us(traces[op]) / b
+        rows.append({
+            "figure": "batching", "scheme": "erda-cluster(4)", "op": op,
+            "value_size": vsize, "seq_us": round(seq_us, 2),
+            **{f"b{b}": round(per_b[b], 2) for b in BATCH_SIZES},
+            "amortized_ratio_b8": round(per_b[8] / seq_us, 3),
+        })
     return rows
 
 

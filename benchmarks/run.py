@@ -61,6 +61,14 @@ def main() -> None:
         print(f"cluster/{r['workload']}/shards{r['n_shards']},{us:.2f},"
               f"avg={r['avg_kops']}KOp/s t64={r['t64']}KOp/s")
 
+    from benchmarks.figures import bench_batching
+    rows = bench_batching()
+    all_rows += rows
+    for r in rows:
+        print(f"batching/{r['scheme']}/{r['op']},{r['b8']},"
+              f"seq={r['seq_us']}us b1={r['b1']}us b16={r['b16']}us "
+              f"ratio_b8={r['amortized_ratio_b8']}")
+
     from repro.core import ServerConfig, make_store
     from repro.workloads.ycsb import run_store_workload
     rows = []

@@ -20,10 +20,10 @@ from __future__ import annotations
 
 import struct
 import zlib
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.hashtable import splitmix64
-from repro.fabric.transport import InProcessTransport
+from repro.fabric.transport import InProcessTransport, WorkRequest
 from repro.nvmsim.device import NVMDevice
 
 _ENTRY = 16  # key u64 + dest addr u64
@@ -84,9 +84,9 @@ class RedoLoggingStore:
         self.stats = {"reads": 0, "writes": 0, "send_ops": 0, "applies": 0}
 
     # ------------------------------------------------------------------ write
-    def write(self, key: int, value: bytes) -> None:
-        self.stats["writes"] += 1
-        self.stats["send_ops"] += 1
+    def _write_wr(self, key: int, value: bytes) -> WorkRequest:
+        """The SEND carrying one write: both the blocking and the batched
+        path post exactly this WR."""
         kv = struct.pack("<Q", key) + bytes(value)  # the key-value pair (N bytes)
         crc = zlib.crc32(kv) & 0xFFFFFFFF
         entry = struct.pack("<I", crc) + kv
@@ -101,11 +101,32 @@ class RedoLoggingStore:
             assert zlib.crc32(entry[4:]) & 0xFFFFFFFF == crc
             self.redo_index[key] = bytes(value)
 
-        self.transport.send_recv("redo.write", _srv, req_bytes=len(kv))
+        return WorkRequest("send_recv", op="redo.write", handler=_srv,
+                           req_bytes=len(kv))
+
+    def write(self, key: int, value: bytes) -> None:
+        self.stats["writes"] += 1
+        self.stats["send_ops"] += 1
+        wr = self._write_wr(key, value)
+        self.transport.send_recv(wr.op, wr.handler, req_bytes=wr.req_bytes)
         # async apply to the destination (second NVM write) — CPU load, not
         # client-visible latency (functional state updated synchronously)
         self._apply(key, value)
-        self.transport.server_async("redo.apply", len(kv))
+        self.transport.server_async("redo.apply", len(value) + 8)
+
+    def multi_write(self, items: Sequence[Tuple[int, bytes]]) -> None:
+        """All k SENDs posted on one doorbell; the server services each RPC
+        individually (two-sided work cannot skip the CPU, only the doorbell
+        and the network legs amortize)."""
+        with self.transport.batch():
+            for key, value in items:
+                self.stats["writes"] += 1
+                self.stats["send_ops"] += 1
+                self.transport.post(self._write_wr(key, value))
+        self.transport.poll()
+        for key, value in items:
+            self._apply(key, value)
+            self.transport.server_async("redo.apply", len(value) + 8)
 
     def _apply(self, key: int, value: bytes) -> None:
         self.stats["applies"] += 1
@@ -123,10 +144,7 @@ class RedoLoggingStore:
         self.redo_index.pop(key, None)
 
     # ------------------------------------------------------------------- read
-    def read(self, key: int) -> Optional[bytes]:
-        self.stats["reads"] += 1
-        self.stats["send_ops"] += 1
-
+    def _read_srv(self, key: int) -> Callable[[], Optional[bytes]]:
         def _srv():
             if key in self.redo_index:  # server first looks in the redo log
                 return self.redo_index[key]
@@ -137,7 +155,25 @@ class RedoLoggingStore:
             kv = self.dev.read(addr, n).tobytes()
             return kv[8:]
 
-        return self.transport.send_recv("redo.read", _srv)
+        return _srv
+
+    def read(self, key: int) -> Optional[bytes]:
+        self.stats["reads"] += 1
+        self.stats["send_ops"] += 1
+        return self.transport.send_recv("redo.read", self._read_srv(key))
+
+    def multi_read(self, keys: Sequence[int]) -> List[Optional[bytes]]:
+        """k read RPCs on one doorbell — each still CPU-serviced per-op."""
+        handles = []
+        with self.transport.batch():
+            for key in keys:
+                self.stats["reads"] += 1
+                self.stats["send_ops"] += 1
+                handles.append(self.transport.post(
+                    WorkRequest("send_recv", op="redo.read",
+                                handler=self._read_srv(key))))
+        self.transport.poll()
+        return [h.result for h in handles]
 
     # ------------------------------------------------------------------ delete
     def delete(self, key: int) -> None:

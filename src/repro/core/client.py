@@ -16,16 +16,29 @@ default ``InProcessTransport`` gives the direct-memory functional model, and
 ``SimTransport`` makes the *same code path* emit calibrated DES latency and
 server-CPU time (benchmarks/schemes_des.py) — one verb accounting, two
 backends, no drift.
+
+``multi_read`` / ``multi_write`` batch independent per-key verbs over the
+transport's posted-WR engine: all k neighborhood reads ride one doorbell, a
+fence orders the dependent leg (word → object address, metadata flip → data
+write), then all k second-leg verbs ride a second doorbell.  Same verbs as k
+sequential ops — the parity tests keep holding — but the fixed round-trip
+cost is paid twice per *batch* instead of twice per *key*.
+
+Remote facts the client needs (head array, registered region size, segment
+size) are captured once at connection establishment (paper §3.3) — the client
+never reaches through the server object for them afterwards; ``reconnect()``
+refreshes them after a server recovery.
 """
 from __future__ import annotations
 
 import struct
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import layout
 from repro.core.hashtable import ENTRY_SIZE, H, STATE_VALID
 from repro.core.server import DataLossError, ErdaServer
-from repro.fabric.transport import InProcessTransport, Transport
+from repro.fabric.transport import (Handle, InProcessTransport, Transport,
+                                    WorkRequest)
 from repro.nvmsim.device import TornWrite
 
 
@@ -33,40 +46,68 @@ class ErdaClient:
     INITIAL_READ = 4096  # speculative first object read when size unknown
 
     def __init__(self, server: ErdaServer, client_id: int = 0,
-                 transport: Optional[Transport] = None):
+                 transport: Optional[Transport] = None, qp: int = 0):
         self.server = server
         self.client_id = client_id
+        self.qp = qp  # this connection's work-queue lane on the transport
         self.transport = transport or InProcessTransport(server.dev)
         self.size_cache: Dict[int, int] = {}
-        # connection establishment: server sends the head array (paper §3.3)
-        self.head_array = server.log.head_array()
+        self.reconnect()
         self.stats = {"reads": 0, "writes": 0, "fallbacks": 0, "repairs": 0,
                       "one_sided_reads": 0, "one_sided_writes": 0, "send_ops": 0}
+
+    def reconnect(self) -> None:
+        """Connection establishment (paper §3.3): the server sends the head
+        array plus the remote facts one-sided access needs — the registered
+        region's size and the log segment size.  Re-run after a server
+        recovery; everything else the client caches (size hints) is
+        stale-but-safe because CRC re-verifies."""
+        self.head_array = self.server.log.head_array()
+        self.remote_size = self.server.dev.size
+        self.segment_size = self.server.log.heads[0].segment_size
 
     # ------------------------------------------------------------- one-sided ops
     def _os_read(self, addr: int, nbytes: int, op: str = "erda.object") -> bytes:
         self.stats["one_sided_reads"] += 1
-        nbytes = min(nbytes, self.server.dev.size - addr)
-        return self.transport.one_sided_read(addr, nbytes, op=op)
+        nbytes = min(nbytes, self.remote_size - addr)
+        return self.transport.one_sided_read(addr, nbytes, op=op, qp=self.qp)
+
+    def _post_os_read(self, addr: int, nbytes: int,
+                      op: str = "erda.object") -> Handle:
+        self.stats["one_sided_reads"] += 1
+        nbytes = min(nbytes, self.remote_size - addr)
+        return self.transport.post(
+            WorkRequest("one_sided_read", op=op, addr=addr, nbytes=nbytes),
+            qp=self.qp)
 
     def _os_write(self, addr: int, data: bytes) -> None:
         self.stats["one_sided_writes"] += 1
-        self.transport.one_sided_write(addr, data, op="erda.data")
+        self.transport.one_sided_write(addr, data, op="erda.data", qp=self.qp)
+
+    def _post_os_write(self, addr: int, data: bytes) -> Handle:
+        self.stats["one_sided_writes"] += 1
+        return self.transport.post(
+            WorkRequest("one_sided_write", op="erda.data", addr=addr, data=data),
+            qp=self.qp)
 
     # ------------------------------------------------------------- metadata read
-    def _read_entry(self, key: int):
-        """One one-sided read of the neighborhood; client-side hopscotch scan."""
+    def _post_entry_read(self, key: int) -> List[Handle]:
+        """Post the neighborhood read(s) for a key: one one-sided read of up
+        to H entries — two when the neighborhood wraps the table end (the
+        registered region is contiguous, the table is a ring)."""
         table = self.server.table
-        home = table.home(key)
-        base = table._addr(home)
-        # neighborhood may wrap the table end; model as a single read (the
-        # registered region is contiguous) of up to H entries
-        raw = b""
+        base = table._addr(table.home(key))
         want = H * ENTRY_SIZE
         first = min(want, table.base + table.capacity * ENTRY_SIZE - base)
-        raw = self._os_read(base, first, op="erda.meta")
+        handles = [self._post_os_read(base, first, op="erda.meta")]
         if first < want:
-            raw += self._os_read(table.base, want - first, op="erda.meta")
+            handles.append(self._post_os_read(table.base, want - first,
+                                              op="erda.meta"))
+        return handles
+
+    @staticmethod
+    def _scan_neighborhood(raw: bytes, key: int) -> Optional[int]:
+        """Client-side hopscotch scan of a fetched neighborhood."""
         for i in range(H):
             chunk = raw[i * ENTRY_SIZE : (i + 1) * ENTRY_SIZE]
             if len(chunk) < ENTRY_SIZE:
@@ -78,10 +119,15 @@ class ErdaClient:
                 return word
         return None
 
+    def _read_entry(self, key: int) -> Optional[int]:
+        handles = self._post_entry_read(key)
+        self.transport.poll(self.qp)
+        return self._scan_neighborhood(b"".join(h.result for h in handles), key)
+
     # ------------------------------------------------------------- object read
-    def _read_object(self, key: int, off: int) -> layout.RecordView:
-        guess = self.size_cache.get(key, self.INITIAL_READ)
-        buf = self._os_read(off, guess)
+    def _parse_object(self, key: int, off: int, buf: bytes) -> layout.RecordView:
+        """CRC-verify + parse a fetched object; one size-miss re-read if the
+        header claims more bytes than the speculative read covered."""
         self.transport.client_crc(len(buf))  # client-side verification cost
         rec = layout.parse_record(memoryview_to_np(buf), 0)
         if not rec.ok:
@@ -90,7 +136,7 @@ class ErdaClient:
             if len(buf) >= layout.HEADER_SIZE:
                 flags, _crc, key_len, val_len = struct.unpack_from(layout.HEADER_FMT, buf, 0)
                 claimed = layout.HEADER_SIZE + key_len + (0 if flags & layout.FLAG_DELETE else val_len)
-                if claimed > len(buf) and claimed <= self.server.log.heads[0].segment_size:
+                if claimed > len(buf) and claimed <= self.segment_size:
                     buf = self._os_read(off, claimed)
                     self.transport.client_crc(len(buf))
                     rec = layout.parse_record(memoryview_to_np(buf), 0)
@@ -98,24 +144,33 @@ class ErdaClient:
             self.size_cache[key] = rec.size
         return rec
 
+    def _read_object(self, key: int, off: int) -> layout.RecordView:
+        guess = self.size_cache.get(key, self.INITIAL_READ)
+        return self._parse_object(key, off, self._os_read(off, guess))
+
     def read(self, key: int) -> Optional[bytes]:
         self.stats["reads"] += 1
         if self.server.is_cleaning(key):
             # during cleaning, ops for this head go through RDMA send (§4.4)
-            self.stats["send_ops"] += 1
-            return self.transport.send_recv(
-                "erda.read", lambda: self.server.handle_read(key))
+            return self._send_read(key)
         word = self._read_entry(key)
         if word is None or word == 0:
             return None
-        _tag, off_new, off_old = layout.unpack_word(word)
+        _tag, off_new, _off_old = layout.unpack_word(word)
         if off_new == layout.NULL_OFF:
             return None
         rec = self._read_object(key, off_new)
+        return self._finish_read(key, word, rec)
+
+    def _finish_read(self, key: int, word: int,
+                     rec: layout.RecordView) -> Optional[bytes]:
+        """Common tail of the read path once the NEW-offset object is parsed:
+        CRC-verified hit, or fallback to the OLD version (paper §4.2)."""
         if rec.ok and rec.key == key:
             return None if rec.deleted else rec.value
         # --- fallback: torn/in-flight new version → old version (paper §4.2)
         self.stats["fallbacks"] += 1
+        _tag, _off_new, off_old = layout.unpack_word(word)
         if off_old == layout.NULL_OFF:
             # torn create; tell the server, the object does not exist yet
             self.stats["repairs"] += 1
@@ -128,54 +183,135 @@ class ErdaClient:
             return None if rec_old.deleted else rec_old.value
         raise DataLossError(f"both versions of key {key} unreadable")
 
+    def _send_read(self, key: int) -> Optional[bytes]:
+        self.stats["send_ops"] += 1
+        return self.transport.send_recv(
+            "erda.read", lambda: self.server.handle_read(key), qp=self.qp)
+
     def _send_repair(self, key: int, word: int) -> None:
         self.stats["send_ops"] += 1
         self.transport.send_recv(
-            "erda.repair", lambda: self.server.handle_repair(key, word))
+            "erda.repair", lambda: self.server.handle_repair(key, word),
+            qp=self.qp)
+
+    # ------------------------------------------------------------- batched reads
+    def multi_read(self, keys: Sequence[int]) -> List[Optional[bytes]]:
+        """Read k keys with 2 doorbells instead of 2 round trips per key.
+
+        Phase 1 posts every key's neighborhood read on one doorbell; the
+        fence completes them (CRC/word checks need the data in hand).  Phase 2
+        posts every resolved key's object read on a second doorbell.  Rare
+        paths — cleaning-head keys, CRC fallbacks, size-miss re-reads — drop
+        to the sequential code so the batched path stays the common case.
+        Observationally equivalent to k sequential ``read()`` calls; issues
+        exactly the same verbs."""
+        out: List[Optional[bytes]] = [None] * len(keys)
+        metas: List[Tuple[int, int, List[Handle]]] = []
+        objs: List[Tuple[int, int, int, Handle]] = []
+        with self.transport.batch() as b:
+            for i, key in enumerate(keys):
+                self.stats["reads"] += 1
+                if self.server.is_cleaning(key):
+                    # §4.4 send path (a blocking verb inside the batch acts as
+                    # a fence for this lane — correctness over amortization on
+                    # the rare path)
+                    out[i] = self._send_read(key)
+                    continue
+                metas.append((i, key, self._post_entry_read(key)))
+            b.fence()  # neighborhoods must be in hand to learn object offsets
+            for i, key, handles in metas:
+                word = self._scan_neighborhood(
+                    b"".join(h.result for h in handles), key)
+                if word is None or word == 0:
+                    continue
+                _tag, off_new, _off_old = layout.unpack_word(word)
+                if off_new == layout.NULL_OFF:
+                    continue
+                guess = self.size_cache.get(key, self.INITIAL_READ)
+                objs.append((i, key, word,
+                             self._post_os_read(off_new, guess)))
+        self.transport.poll(self.qp)  # drain the lane's CQ for both doorbells
+        for i, key, word, h in objs:
+            _tag, off_new, _off_old = layout.unpack_word(word)
+            rec = self._parse_object(key, off_new, h.result)
+            out[i] = self._finish_read(key, word, rec)
+        return out
 
     # ------------------------------------------------------------- write path
     def write(self, key: int, value: bytes) -> None:
         self.stats["writes"] += 1
         rec = layout.pack_record(key, value)
         if self.server.is_cleaning(key):
-            # §4.4 send path: the server allocates AND performs the data write
-            self.stats["send_ops"] += 1
-
-            def _srv():
-                addr, size = self.server.handle_write_req(key, len(value))
-                self.server.dev.write(addr, rec)
-                return addr, size
-
-            addr, size = self.transport.send_recv(
-                "erda.write_cleaning", _srv, req_bytes=len(rec))
+            addr, size = self._send_write_cleaning(key, rec, len(value))
             self.size_cache[key] = size
             self._post_write(key, addr, size)
             return
         self.stats["send_ops"] += 1
         addr, size = self.transport.write_with_imm(
-            "erda.write_req", lambda: self.server.handle_write_req(key, len(value)))
+            "erda.write_req",
+            lambda: self.server.handle_write_req(key, len(value)), qp=self.qp)
         self._os_write(addr, rec)  # may raise TornWrite under fault injection
         self.size_cache[key] = size
         self._post_write(key, addr, size)
+
+    def _send_write_cleaning(self, key: int, rec: bytes,
+                             val_len: int, *, delete: bool = False):
+        """§4.4 send path: the server allocates AND performs the data write."""
+        self.stats["send_ops"] += 1
+
+        def _srv():
+            addr, size = self.server.handle_write_req(key, val_len, delete=delete)
+            self.server.dev.write(addr, rec)
+            return addr, size
+
+        return self.transport.send_recv("erda.write_cleaning", _srv,
+                                        req_bytes=len(rec), qp=self.qp)
+
+    # ------------------------------------------------------------ batched writes
+    def multi_write(self, items: Sequence[Tuple[int, bytes]]) -> None:
+        """Write k key/value pairs with 2 doorbells: one for every metadata
+        write_with_imm (the server's atomic flips), a fence — each data write
+        needs the address its metadata leg returned, and the protocol orders
+        flip-then-data per key — then one doorbell for every one-sided data
+        write.  Same verbs as k sequential ``write()`` calls."""
+        imms: List[Tuple[int, bytes, bytes, Handle]] = []
+        done: List[Tuple[int, int, int]] = []
+        with self.transport.batch() as b:
+            for key, value in items:
+                self.stats["writes"] += 1
+                rec = layout.pack_record(key, value)
+                if self.server.is_cleaning(key):
+                    addr, size = self._send_write_cleaning(key, rec, len(value))
+                    done.append((key, addr, size))
+                    continue
+                self.stats["send_ops"] += 1
+                h = self.transport.post(
+                    WorkRequest("write_with_imm", op="erda.write_req",
+                                handler=lambda k=key, n=len(value):
+                                    self.server.handle_write_req(k, n)),
+                    qp=self.qp)
+                imms.append((key, value, rec, h))
+            b.fence()  # metadata flip completes before its dependent data write
+            for key, _value, rec, h in imms:
+                addr, size = h.result
+                self._post_os_write(addr, rec)
+                done.append((key, addr, size))
+        self.transport.poll(self.qp)
+        for key, addr, size in done:
+            self.size_cache[key] = size
+            self._post_write(key, addr, size)
 
     def delete(self, key: int) -> None:
         self.stats["writes"] += 1
         rec = layout.pack_record(key, None, delete=True)
         if self.server.is_cleaning(key):
-            self.stats["send_ops"] += 1
-
-            def _srv():
-                addr, size = self.server.handle_write_req(key, 0, delete=True)
-                self.server.dev.write(addr, rec)
-                return addr, size
-
-            addr, size = self.transport.send_recv(
-                "erda.write_cleaning", _srv, req_bytes=len(rec))
+            addr, size = self._send_write_cleaning(key, rec, 0, delete=True)
         else:
             self.stats["send_ops"] += 1
             addr, size = self.transport.write_with_imm(
                 "erda.write_req",
-                lambda: self.server.handle_write_req(key, 0, delete=True))
+                lambda: self.server.handle_write_req(key, 0, delete=True),
+                qp=self.qp)
             self._os_write(addr, rec)
         # drop the stale size hint: a recreate may be any size, and the cached
         # live-record size would force the size-miss re-read path needlessly

@@ -24,7 +24,7 @@ Cluster-wide coordination:
 from __future__ import annotations
 
 import bisect
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.client import ErdaClient
 from repro.core.hashtable import splitmix64
@@ -68,8 +68,10 @@ class ErdaCluster:
         cfg = cfg or SHARD_CONFIG
         self.ring = HashRing(n_shards, vnodes)
         self.servers: List[ErdaServer] = [ErdaServer(cfg) for _ in range(n_shards)]
+        # each shard connection gets its own QP lane, so per-shard batches are
+        # independently doorbell'd and their completions overlap across shards
         self.clients: List[ErdaClient] = [
-            ErdaClient(s, client_id=i,
+            ErdaClient(s, client_id=i, qp=i,
                        transport=transport_factory(s.dev) if transport_factory else None)
             for i, s in enumerate(self.servers)
         ]
@@ -94,14 +96,39 @@ class ErdaCluster:
     def delete(self, key: int) -> None:
         self.client_for_key(key).delete(key)
 
+    # ------------------------------------------------------------- batched ops
+    def multi_read(self, keys: Sequence[int]) -> List[Optional[bytes]]:
+        """Batched read across shards: keys group by owning shard, each shard
+        client posts its sub-batch over its own QP (2 doorbells per shard, not
+        2 round trips per key), and completions overlap across shards — the
+        DES layer replays per-shard traces concurrently."""
+        by_shard: Dict[int, List[int]] = {}
+        for i, key in enumerate(keys):
+            by_shard.setdefault(self.ring.shard_for(key), []).append(i)
+        out: List[Optional[bytes]] = [None] * len(keys)
+        for shard, idxs in by_shard.items():
+            vals = self.clients[shard].multi_read([keys[i] for i in idxs])
+            for i, v in zip(idxs, vals):
+                out[i] = v
+        return out
+
+    def multi_write(self, items: Sequence[Tuple[int, bytes]]) -> None:
+        """Batched write across shards: per-shard sub-batches, each 2
+        doorbells (metadata flips, fence, data writes) on that shard's QP."""
+        by_shard: Dict[int, List[Tuple[int, bytes]]] = {}
+        for key, value in items:
+            by_shard.setdefault(self.ring.shard_for(key), []).append((key, value))
+        for shard, shard_items in by_shard.items():
+            self.clients[shard].multi_write(shard_items)
+
     # ---------------------------------------------------------------- recovery
     def recover_shard(self, shard: int) -> Dict[str, int]:
         """Independent §4.2 recovery of one failed shard; other shards keep
         serving untouched."""
         stats = self.servers[shard].recover()
         # the shard's clients reconnect: size hints may be stale-but-safe
-        # (CRC re-verifies), the head array must be refreshed
-        self.clients[shard].head_array = self.servers[shard].log.head_array()
+        # (CRC re-verifies), the connection-time constants must be refreshed
+        self.clients[shard].reconnect()
         return stats
 
     def recover(self) -> Dict[str, int]:

@@ -1,18 +1,23 @@
 # The pluggable RDMA transport seam: all remote access in repro.core goes
-# through a Transport (five verbs).  InProcessTransport = functional model;
-# SimTransport = same semantics + calibrated DES timing steps.
-from repro.fabric.transport import (MSG_BYTES, VERBS, InProcessTransport,
-                                    OpRecord, Transport, make_transport)
+# through a Transport (five verbs over a posted-WR/CQ/doorbell engine).
+# InProcessTransport = functional model; SimTransport = same semantics +
+# calibrated DES timing steps, priced per doorbell so batching amortizes.
+from repro.fabric.transport import (MSG_BYTES, ONE_SIDED_VERBS, VERBS, Handle,
+                                    InProcessTransport, OpRecord, Transport,
+                                    WorkRequest, make_transport)
 from repro.fabric.sim import (SimTransport, replay_steps, steps_cpu_s,
                               steps_latency_s)
 
 __all__ = [
     "MSG_BYTES",
+    "ONE_SIDED_VERBS",
     "VERBS",
+    "Handle",
     "InProcessTransport",
     "OpRecord",
     "SimTransport",
     "Transport",
+    "WorkRequest",
     "make_transport",
     "replay_steps",
     "steps_cpu_s",

@@ -13,18 +13,42 @@ goes through a ``Transport`` exposing the five RDMA primitives Erda uses:
   * ``atomic_word_write``  — 8-byte remote atomic store (the paper's
                              atomicity unit, §2.2)
 
+Underneath the five call-and-return verbs sits a **posted-work-request
+engine**, the way a real RNIC is driven:
+
+  * ``post(wr, qp=...)``   — enqueue a ``WorkRequest`` on a QP's send queue;
+                             returns a ``Handle`` (the WQE's completion cookie)
+  * ``flush(qp)``          — ring the doorbell: execute every queued WR of the
+                             lane, in posted order, and deliver completions
+  * ``poll(qp)``           — drain the completion queue (CQ)
+  * ``batch()``            — context manager for doorbell batching: posts
+                             accumulate and ONE doorbell per lane is rung at
+                             exit; ``batch.fence()`` is an explicit ordering
+                             point that rings mid-batch (used where the
+                             protocol genuinely orders, e.g. Erda's metadata
+                             flip before the dependent data write)
+  * ``post_many(wrs)``     — post a list of WRs and ring once
+
+Outside a ``batch()`` every ``post`` rings its own doorbell, so the five
+blocking verbs are literally post + flush + poll — one WR, one doorbell — and
+all existing callers keep their exact semantics and (in the sim backend)
+their exact timing.  WRs on one QP execute in posted order; a WR that raises
+drops the rest of its doorbell's chain (RDMA flush-with-error semantics).
+
 Two backends implement the protocol:
 
   * ``InProcessTransport`` (here) — direct-memory semantics, zero overhead;
     what all functional tests run on.
   * ``SimTransport`` (``repro.fabric.sim``) — same functional semantics, but
-    every verb additionally emits calibrated DES timing steps, so the *real*
-    client/baseline code produces the latency / server-CPU numbers for the
-    paper-validation benchmarks.  No hand-duplicated op models.
+    every *doorbell* additionally emits calibrated DES timing steps: the
+    per-verb transfer/CPU/persist costs stay per-WR, while the base RTT /
+    doorbell overhead is charged once per ring — which is exactly the
+    amortization real doorbell batching buys.
 
-Both backends meter per-verb counts (``counts``) and, when ``trace=True``,
-record an op-for-op ``OpRecord`` trace — the hook the verb-count parity tests
-use to assert the functional model and the timed model cannot drift.
+Both backends meter per-verb counts (``counts``), a ``doorbells`` counter,
+and, when ``trace=True``, record an op-for-op ``OpRecord`` trace — the hook
+the verb-count parity tests use to assert the functional model and the timed
+model cannot drift: batching changes doorbells, never verbs.
 
 Two-sided ops take the *handler thunk* directly instead of going through a
 wire format: the op label (e.g. ``"erda.write_req"``) identifies the RPC for
@@ -34,13 +58,17 @@ thunk performs the server-side state change in process.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Protocol, runtime_checkable
+from typing import (Any, Callable, Dict, List, Optional, Protocol,
+                    runtime_checkable)
 
 from repro.nvmsim.device import NVMDevice
 
 #: the five RDMA primitives of the protocol (order = paper presentation order)
 VERBS = ("one_sided_read", "one_sided_write", "write_with_imm", "send_recv",
          "atomic_word_write")
+
+#: the subset that never touches the server CPU
+ONE_SIDED_VERBS = ("one_sided_read", "one_sided_write", "atomic_word_write")
 
 #: default wire size of a two-sided request/response descriptor (bytes)
 MSG_BYTES = 64
@@ -54,38 +82,112 @@ class OpRecord:
     nbytes: int
 
 
+@dataclasses.dataclass
+class WorkRequest:
+    """One posted verb (a WQE).  Which operand fields matter depends on
+    ``verb``: one-sided reads use addr/nbytes, writes addr/data/persist,
+    atomics addr/word, two-sided ops handler/req_bytes/resp_bytes."""
+    verb: str
+    op: str = ""
+    addr: int = 0
+    nbytes: int = 0
+    data: Optional[bytes] = None
+    word: int = 0
+    handler: Optional[Callable[[], Any]] = None
+    req_bytes: int = MSG_BYTES
+    resp_bytes: Optional[int] = None
+    persist: bool = True
+
+
+class Handle:
+    """Completion cookie for a posted WorkRequest."""
+    __slots__ = ("wr", "qp", "done", "result")
+
+    def __init__(self, wr: WorkRequest, qp: int):
+        self.wr = wr
+        self.qp = qp
+        self.done = False
+        self.result: Any = None
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        state = "done" if self.done else "posted"
+        return f"<Handle {self.wr.verb}/{self.wr.op} qp={self.qp} {state}>"
+
+
+class _Batch:
+    """Doorbell-batching scope: posts accumulate; ONE doorbell per lane rings
+    at exit.  ``fence()`` rings immediately — the explicit ordering point."""
+
+    def __init__(self, transport: "InProcessTransport"):
+        self.t = transport
+
+    def __enter__(self) -> "_Batch":
+        self.t._batch_depth += 1
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.t._batch_depth -= 1
+        if self.t._batch_depth == 0:
+            if exc_type is None:
+                self.t.flush()
+            else:
+                # aborted batch: posted-but-not-doorbelled WQEs never reach
+                # the NIC — drop them instead of letting a later unrelated
+                # doorbell execute stale work
+                self.t._abort_posted()
+        return False
+
+    def fence(self) -> None:
+        """Ring now: everything posted so far completes before anything
+        posted after — used where the protocol genuinely orders (e.g. the
+        metadata flip a dependent data write needs the address from)."""
+        self.t.flush()
+
+
 @runtime_checkable
 class Transport(Protocol):
-    """The five RDMA primitives every store issues its remote access through."""
+    """The posted-verb seam every store issues its remote access through."""
 
-    def one_sided_read(self, addr: int, nbytes: int, *, op: str = "") -> bytes: ...
+    def post(self, wr: WorkRequest, qp: int = 0) -> Handle: ...
+
+    def poll(self, qp: int = 0, max_n: Optional[int] = None) -> List[Handle]: ...
+
+    def batch(self) -> _Batch: ...
+
+    def one_sided_read(self, addr: int, nbytes: int, *, op: str = "",
+                       qp: int = 0) -> bytes: ...
 
     def one_sided_write(self, addr: int, data: bytes, *, op: str = "",
-                        persist: bool = True) -> None: ...
+                        persist: bool = True, qp: int = 0) -> None: ...
 
     def write_with_imm(self, op: str, handler: Callable[[], Any], *,
-                       req_bytes: int = MSG_BYTES) -> Any: ...
+                       req_bytes: int = MSG_BYTES, qp: int = 0) -> Any: ...
 
     def send_recv(self, op: str, handler: Callable[[], Any], *,
                   req_bytes: int = MSG_BYTES,
-                  resp_bytes: Optional[int] = None) -> Any: ...
+                  resp_bytes: Optional[int] = None, qp: int = 0) -> Any: ...
 
-    def atomic_word_write(self, addr: int, word: int, *, op: str = "") -> None: ...
+    def atomic_word_write(self, addr: int, word: int, *, op: str = "",
+                          qp: int = 0) -> None: ...
 
 
 class InProcessTransport:
     """Direct-memory transport: the functional-model backend.
 
     Executes every primitive against the target NVM device / server handler
-    with zero overhead, while metering verb counts (and optionally a full op
-    trace) so tests can assert the protocol's verb footprint.
+    with zero overhead, while metering verb counts, doorbells, and optionally
+    a full op trace so tests can assert the protocol's verb footprint.
     """
 
     def __init__(self, dev: NVMDevice, *, trace: bool = False):
         self.dev = dev
         self.counts: Dict[str, int] = {v: 0 for v in VERBS}
+        self.doorbells = 0
         self.trace_enabled = trace
         self.trace: List[OpRecord] = []
+        self._sq: Dict[int, List[Handle]] = {}  # per-QP send queues (posted)
+        self._cq: Dict[int, List[Handle]] = {}  # per-QP completion queues
+        self._batch_depth = 0
 
     # ------------------------------------------------------------- bookkeeping
     def _note(self, verb: str, op: str, nbytes: int) -> None:
@@ -97,33 +199,141 @@ class InProcessTransport:
         t, self.trace = self.trace, []
         return t
 
+    # ----------------------------------------------------------- posted engine
+    def post(self, wr: WorkRequest, qp: int = 0) -> Handle:
+        """Post a WR on lane ``qp``.  Outside a batch() scope the doorbell
+        rings immediately (one WR, one doorbell — the classic blocking verb)."""
+        h = Handle(wr, qp)
+        self._sq.setdefault(qp, []).append(h)
+        if self._batch_depth == 0:
+            self._ring(qp)
+        return h
+
+    def post_many(self, wrs: List[WorkRequest], qp: int = 0) -> List[Handle]:
+        """Post a chain of WRs and ring ONE doorbell for all of them."""
+        with self.batch():
+            return [self.post(wr, qp) for wr in wrs]
+
+    def batch(self) -> _Batch:
+        return _Batch(self)
+
+    def flush(self, qp: Optional[int] = None) -> None:
+        """Ring the doorbell: execute queued WRs (all lanes if qp is None)."""
+        if qp is not None:
+            self._ring(qp)
+            return
+        try:
+            for lane in sorted(self._sq):
+                self._ring(lane)
+        except BaseException:
+            # flush-with-error across lanes: a chain that faults must not
+            # leave the remaining lanes' posted-but-unrung WQEs behind to
+            # fire on a later unrelated doorbell
+            self._abort_posted()
+            raise
+
+    def _abort_posted(self) -> None:
+        """Discard every queued-but-unrung WR (an aborted batch)."""
+        for lane in self._sq:
+            self._sq[lane] = []
+
+    def poll(self, qp: int = 0, max_n: Optional[int] = None) -> List[Handle]:
+        """Drain (up to ``max_n``) completions from lane ``qp``'s CQ."""
+        cq = self._cq.get(qp)
+        if not cq:
+            return []
+        if max_n is None:
+            out, self._cq[qp] = cq, []
+        else:
+            out, self._cq[qp] = cq[:max_n], cq[max_n:]
+        return out
+
+    def _ring(self, qp: int) -> None:
+        """Execute the lane's posted chain in order; deliver completions and
+        charge the backend's per-doorbell cost.  A WR that raises drops the
+        rest of the chain (flush-with-error) and propagates."""
+        pending = self._sq.get(qp)
+        if not pending:
+            return
+        self._sq[qp] = []
+        self.doorbells += 1
+        executed: List[Handle] = []
+        try:
+            for h in pending:
+                h.result = self._execute(h.wr)
+                h.done = True
+                executed.append(h)
+        finally:
+            if executed:
+                self._cq.setdefault(qp, []).extend(executed)
+                self._charge_doorbell(executed, qp)
+
+    def _execute(self, wr: WorkRequest) -> Any:
+        """Direct-memory execution of one WR (the functional semantics)."""
+        verb = wr.verb
+        if verb == "one_sided_read":
+            self._note(verb, wr.op, wr.nbytes)
+            return self.dev.read(wr.addr, wr.nbytes).tobytes()
+        if verb == "one_sided_write":
+            self._note(verb, wr.op, len(wr.data))
+            self.dev.write(wr.addr, wr.data)  # may raise TornWrite under fault
+            return None
+        if verb == "atomic_word_write":
+            self._note(verb, wr.op, 8)
+            self.dev.write_u64_atomic(wr.addr, wr.word)
+            return None
+        if verb in ("write_with_imm", "send_recv"):
+            self._note(verb, wr.op, wr.req_bytes)
+            return wr.handler()
+        raise ValueError(f"unknown verb {verb!r}")
+
+    def _charge_doorbell(self, handles: List[Handle], qp: int) -> None:
+        """Backend hook, called once per doorbell with the executed chain.
+        Zero cost here; SimTransport prices the batch."""
+
+    def _call(self, wr: WorkRequest, qp: int = 0) -> Any:
+        """Blocking verb = post + flush + consume own completion.  Called
+        inside an open batch() it acts as a fence for its lane."""
+        h = self.post(wr, qp)
+        if not h.done:
+            self._ring(qp)
+        cq = self._cq.get(qp)
+        if cq and cq[-1] is h:  # consume our completion so the CQ stays clean
+            cq.pop()
+        elif cq and h in cq:
+            cq.remove(h)
+        return h.result
+
     # --------------------------------------------------------------- one-sided
-    def one_sided_read(self, addr: int, nbytes: int, *, op: str = "") -> bytes:
-        self._note("one_sided_read", op, nbytes)
-        return self.dev.read(addr, nbytes).tobytes()
+    def one_sided_read(self, addr: int, nbytes: int, *, op: str = "",
+                       qp: int = 0) -> bytes:
+        return self._call(WorkRequest("one_sided_read", op=op, addr=addr,
+                                      nbytes=nbytes), qp)
 
     def one_sided_write(self, addr: int, data: bytes, *, op: str = "",
-                        persist: bool = True) -> None:
+                        persist: bool = True, qp: int = 0) -> None:
         """``persist=False`` when the scheme pays for persistence elsewhere
         (e.g. RAW's forcing read) — only the sim backend's latency model cares."""
-        self._note("one_sided_write", op, len(data))
-        self.dev.write(addr, data)  # may raise TornWrite under fault injection
+        self._call(WorkRequest("one_sided_write", op=op, addr=addr, data=data,
+                               persist=persist), qp)
 
-    def atomic_word_write(self, addr: int, word: int, *, op: str = "") -> None:
-        self._note("atomic_word_write", op, 8)
-        self.dev.write_u64_atomic(addr, word)
+    def atomic_word_write(self, addr: int, word: int, *, op: str = "",
+                          qp: int = 0) -> None:
+        self._call(WorkRequest("atomic_word_write", op=op, addr=addr,
+                               word=word), qp)
 
     # --------------------------------------------------------------- two-sided
     def write_with_imm(self, op: str, handler: Callable[[], Any], *,
-                       req_bytes: int = MSG_BYTES) -> Any:
-        self._note("write_with_imm", op, req_bytes)
-        return handler()
+                       req_bytes: int = MSG_BYTES, qp: int = 0) -> Any:
+        return self._call(WorkRequest("write_with_imm", op=op, handler=handler,
+                                      req_bytes=req_bytes), qp)
 
     def send_recv(self, op: str, handler: Callable[[], Any], *,
                   req_bytes: int = MSG_BYTES,
-                  resp_bytes: Optional[int] = None) -> Any:
-        self._note("send_recv", op, req_bytes)
-        return handler()
+                  resp_bytes: Optional[int] = None, qp: int = 0) -> Any:
+        return self._call(WorkRequest("send_recv", op=op, handler=handler,
+                                      req_bytes=req_bytes,
+                                      resp_bytes=resp_bytes), qp)
 
     # ------------------------------------------------- non-verb timing hooks
     # These carry no bytes over the fabric; the sim backend turns them into

@@ -12,7 +12,7 @@ independently); pass any ``make_store(...)`` object to override — e.g. a
 single ``ErdaStore`` for the smallest deployments."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -43,25 +43,37 @@ class ErdaKVPageStore:
         raw = self.store.read(_page_key(seq_id, name, idx))
         return None if raw is None else leaf_from_bytes(raw)
 
+    def get_pages(self, seq_id: int, name: str,
+                  idxs: Sequence[int]) -> List[Optional[np.ndarray]]:
+        """Multi-page fetch: one doorbell-batched ``multi_read`` over the
+        backing store (per-shard sub-batches on a cluster) instead of one
+        round trip per page — the decode-time fill path for a sequence."""
+        raws = self.store.multi_read([_page_key(seq_id, name, i) for i in idxs])
+        return [None if raw is None else leaf_from_bytes(raw) for raw in raws]
+
     def drop_page(self, seq_id: int, name: str, idx: int) -> None:
         self.store.delete(_page_key(seq_id, name, idx))
 
     # ------------------------------------------------- cache snapshot/restore
     def snapshot_cache(self, seq_id: int, cache) -> int:
-        """Persist a whole decode cache pytree as numbered pages."""
+        """Persist a whole decode cache pytree as numbered pages — one batched
+        multi_write (2 doorbells per shard), not one write per leaf."""
         leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
-        for i, (path, leaf) in enumerate(leaves):
-            self.put_page(seq_id, jax.tree_util.keystr(path), 0, leaf)
+        self.store.multi_write(
+            [(_page_key(seq_id, jax.tree_util.keystr(path), 0),
+              leaf_to_bytes(leaf)) for path, leaf in leaves])
         return len(leaves)
 
     def restore_cache(self, seq_id: int, template):
         leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+        raws = self.store.multi_read(
+            [_page_key(seq_id, jax.tree_util.keystr(path), 0)
+             for path, _leaf in leaves])
         out = []
-        for path, leaf in leaves:
-            arr = self.get_page(seq_id, jax.tree_util.keystr(path), 0)
-            if arr is None:
+        for (path, leaf), raw in zip(leaves, raws):
+            if raw is None:
                 return None
-            out.append(arr.astype(np.asarray(leaf).dtype))
+            out.append(leaf_from_bytes(raw).astype(np.asarray(leaf).dtype))
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(template), out)
 

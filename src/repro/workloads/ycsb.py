@@ -64,32 +64,74 @@ def make_ops(workload: str, n_ops: int, n_keys: int, seed: int = 0):
 
 
 # --------------------------------------------------------------- store driver
+def _op_runs(ops, batch_size: int):
+    """Split an op stream into maximal same-kind runs of ≤ batch_size — the
+    unit a batched client can issue as one multi-op without reordering a
+    read past a write it depends on."""
+    run, kind = [], None
+    for op, k in ops:
+        if op != kind or len(run) == batch_size:
+            if run:
+                yield kind, run
+            run, kind = [], op
+        run.append(k)
+    if run:
+        yield kind, run
+
+
 def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
-                       value_size: int = 128, seed: int = 0) -> dict:
+                       value_size: int = 128, seed: int = 0,
+                       batch_size: int = 0) -> dict:
     """Drive any ``make_store(...)`` object (single-server Erda, sharded
     ``erda-cluster``, or a baseline) with a YCSB op stream, checking every
     read against a dict model.  Returns op counts + the store's own stats —
-    the functional-side companion of the DES benchmarks."""
+    the functional-side companion of the DES benchmarks.
+
+    ``batch_size > 1`` enables batched mode: same-kind op runs (up to
+    batch_size) go through the store's doorbell-batched ``multi_read`` /
+    ``multi_write`` instead of one call per op."""
     ops = make_ops(workload, n_ops, n_keys, seed)
     rng = np.random.default_rng(seed + 2)
     model = {}
-    # load phase: every key gets an initial value (YCSB's load stage)
-    for k in range(n_keys):
-        v = rng.bytes(value_size)
-        store.write(k + 1, v)  # keys are 1-based: 0 is the empty-slot sentinel
-        model[k + 1] = v
-    n_reads = n_writes = 0
-    for op, k in ops:
-        k += 1
-        if op == "read":
-            n_reads += 1
-            got = store.read(k)
-            assert got == model.get(k), f"driver mismatch on key {k}"
-        else:
-            n_writes += 1
-            v = rng.bytes(value_size)
+    batched = batch_size and batch_size > 1
+    # load phase: every key gets an initial value (YCSB's load stage);
+    # keys are 1-based: 0 is the empty-slot sentinel
+    load = [(k + 1, rng.bytes(value_size)) for k in range(n_keys)]
+    if batched:
+        for i in range(0, len(load), batch_size):
+            store.multi_write(load[i : i + batch_size])
+    else:
+        for k, v in load:
             store.write(k, v)
-            model[k] = v
+    model.update(load)
+    n_reads = n_writes = 0
+    if batched:
+        for kind, keys in _op_runs(ops, batch_size):
+            keys = [k + 1 for k in keys]
+            if kind == "read":
+                n_reads += len(keys)
+                got = store.multi_read(keys)
+                for k, g in zip(keys, got):
+                    if g != model.get(k):  # must check even under -O
+                        raise RuntimeError(f"driver mismatch on key {k}")
+            else:
+                n_writes += len(keys)
+                items = [(k, rng.bytes(value_size)) for k in keys]
+                store.multi_write(items)
+                model.update(items)
+    else:
+        for op, k in ops:
+            k += 1
+            if op == "read":
+                n_reads += 1
+                got = store.read(k)
+                if got != model.get(k):  # must check even under -O
+                    raise RuntimeError(f"driver mismatch on key {k}")
+            else:
+                n_writes += 1
+                v = rng.bytes(value_size)
+                store.write(k, v)
+                model[k] = v
     return {"workload": workload, "n_ops": len(ops), "n_keys": n_keys,
-            "reads": n_reads, "writes": n_writes,
+            "reads": n_reads, "writes": n_writes, "batch_size": batch_size,
             "store_stats": dict(store.stats)}

@@ -97,3 +97,24 @@ def test_object_never_spans_segments(store):
 def test_oversized_record_rejected(store):
     with pytest.raises(ValueError):
         store.write(1, b"B" * store.server.cfg.segment_size)
+
+
+def test_neighborhood_wrapping_table_end(store):
+    """Regression: a key whose hopscotch neighborhood wraps the table end is
+    fetched with a TWO-segment metadata read (end of table + start of table)
+    and still resolves to the correct entry."""
+    from repro.core.hashtable import H
+    table = store.server.table
+    wrap_keys = [k for k in range(1, 200_000)
+                 if table.home(k) > table.capacity - H][:3]
+    assert wrap_keys, "no wrapping key found for this capacity"
+    for key in wrap_keys:
+        store.write(key, b"wrapped-%d" % key)
+    before = store.stats["one_sided_reads"]
+    for key in wrap_keys:
+        assert store.read(key) == b"wrapped-%d" % key
+    # each read: 2 metadata reads (the wrap) + 1 object read
+    assert store.stats["one_sided_reads"] == before + 3 * len(wrap_keys)
+    # the batched path handles the wrap identically
+    assert store.client.multi_read(wrap_keys) \
+        == [b"wrapped-%d" % k for k in wrap_keys]

@@ -88,6 +88,41 @@ def random_ops(rng, n):
     return ops
 
 
+def check_multi_ops_equiv_sequential(store_batched, store_seq, rounds):
+    """multi_read / multi_write must be observationally equivalent to the
+    sequential loop: drive two identical stores, one through the batched
+    ops, one op-at-a-time, and compare every result + the full final state."""
+    model = {}
+    touched = set()
+    for kind, payload in rounds:
+        if kind == "write":
+            store_batched.multi_write(payload)
+            for k, v in payload:
+                store_seq.write(k, v)
+                model[k] = v
+                touched.add(k)
+        else:
+            touched.update(payload)
+            got_b = store_batched.multi_read(payload)
+            got_s = [store_seq.read(k) for k in payload]
+            assert got_b == got_s == [model.get(k) for k in payload]
+    keys = sorted(touched)
+    assert store_batched.multi_read(keys) == [store_seq.read(k) for k in keys] \
+        == [model.get(k) for k in keys]
+
+
+def random_multi_rounds(rng, n_rounds):
+    rounds = []
+    for _ in range(n_rounds):
+        size = int(rng.integers(1, 12))
+        if rng.random() < 0.5:
+            rounds.append(("write", [(int(k), rng.bytes(int(rng.integers(0, 150))))
+                                     for k in rng.integers(1, 30, size=size)]))
+        else:
+            rounds.append(("read", [int(k) for k in rng.integers(1, 35, size=size)]))
+    return rounds
+
+
 # ------------------------------------------------------------ hypothesis suite
 if HAVE_HYPOTHESIS:
 
@@ -154,6 +189,31 @@ if HAVE_HYPOTHESIS:
         s = small_store()
         check_torn_write_invariant(s, s.dev, ops, tear_at, fraction)
 
+    multi_rounds_strategy = st.lists(
+        st.one_of(
+            st.tuples(st.just("write"),
+                      st.lists(st.tuples(st.integers(min_value=1, max_value=29),
+                                         st.binary(min_size=0, max_size=150)),
+                               min_size=1, max_size=11)),
+            st.tuples(st.just("read"),
+                      st.lists(st.integers(min_value=1, max_value=34),
+                               min_size=1, max_size=11)),
+        ),
+        min_size=1, max_size=16,
+    )
+
+    @given(multi_rounds_strategy)
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_erda_multi_ops_equiv_sequential(rounds):
+        check_multi_ops_equiv_sequential(small_store(), small_store(), rounds)
+
+    @given(multi_rounds_strategy)
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_cluster_multi_ops_equiv_sequential(rounds):
+        check_multi_ops_equiv_sequential(small_cluster(), small_cluster(), rounds)
+
     @given(st.integers(min_value=1, max_value=200))
     @settings(max_examples=20, deadline=None)
     def test_cleaning_idempotent_contents(n_keys):
@@ -218,6 +278,15 @@ def test_smoke_matches_dict_model(store_maker):
     rng = np.random.default_rng(3)
     for trial in range(8):
         check_matches_dict_model(store_maker(), random_ops(rng, 120))
+
+
+@pytest.mark.parametrize("store_maker", [small_store, small_cluster],
+                         ids=["erda", "erda-cluster"])
+def test_smoke_multi_ops_equiv_sequential(store_maker):
+    rng = np.random.default_rng(5)
+    for trial in range(5):
+        check_multi_ops_equiv_sequential(store_maker(), store_maker(),
+                                         random_multi_rounds(rng, 12))
 
 
 def test_smoke_torn_write_never_corrupts_observable_state():
