@@ -15,7 +15,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.schemes_des import (batched_latency_us, capture_batch_traces,
+from benchmarks.schemes_des import (batched_latency_us,
                                     capture_cluster_batch_traces,
                                     capture_op_traces, make_sim,
                                     op_latency_us, overlapped_latency_us)
@@ -214,6 +214,39 @@ def bench_batching() -> List[Dict]:
             "value_size": vsize, "seq_us": round(seq_us, 2),
             **{f"b{b}": round(per_b[b], 2) for b in BATCH_SIZES},
             "amortized_ratio_b8": round(per_b[8] / seq_us, 3),
+        })
+    return rows
+
+
+# ---------------------------------- replication cost (beyond the paper: §ROADMAP)
+REPLICATION_BATCHES = [1, 2, 4, 8]
+
+
+def bench_replication(vsizes=(128, 1024)) -> List[Dict]:
+    """Cost of synchronous primary-backup mirroring: per-op latency of a
+    mirrored batched write (both lanes' doorbell chains replayed as
+    concurrent DES processes) vs the unreplicated batched write, batch sizes
+    1-8.  Expected: the mirror legs ride the backup's own QP and overlap, so
+    the replicated write stays within ~1.5x of unreplicated at every batch
+    size instead of paying a serialized second round trip."""
+    from benchmarks.schemes_des import replicated_write_latency_us
+    rows = []
+    for vsize in vsizes:
+        per_b = {}
+        for b in REPLICATION_BATCHES:
+            unrepl = batched_latency_us("erda", "write", vsize, b)
+            repl = replicated_write_latency_us(vsize, b)
+            per_b[b] = {"unrepl_us": unrepl, "repl_us": repl,
+                        "ratio": repl / unrepl}
+        rows.append({
+            "figure": "replication", "scheme": "erda-cluster(r2)",
+            "op": "write", "value_size": vsize,
+            **{f"unrepl_b{b}": round(per_b[b]["unrepl_us"], 2)
+               for b in REPLICATION_BATCHES},
+            **{f"repl_b{b}": round(per_b[b]["repl_us"], 2)
+               for b in REPLICATION_BATCHES},
+            **{f"ratio_b{b}": round(per_b[b]["ratio"], 3)
+               for b in REPLICATION_BATCHES},
         })
     return rows
 

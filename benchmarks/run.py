@@ -1,9 +1,10 @@
 """Benchmark driver — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline] [--only a,b,...]
 
-Prints ``name,us_per_call,derived`` CSV rows and tees full results to
-artifacts/bench_results.json.
+``--only`` runs just the named figures (e.g. ``--only replication,batching``
+— what the CI benchmark-smoke step uses).  Prints ``name,us_per_call,derived``
+CSV rows and tees full results to artifacts/bench_results.json.
 """
 from __future__ import annotations
 
@@ -18,7 +19,13 @@ sys.path.insert(0, "src")
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated figure names to run (default: all)")
     args, _ = ap.parse_known_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    def want(name: str) -> bool:
+        return not only or name in only
 
     from benchmarks.figures import (bench_cleaning, bench_cpu_cost,
                                     bench_latency, bench_nvm_writes,
@@ -28,85 +35,104 @@ def main() -> None:
     all_rows = []
     print("name,us_per_call,derived")
 
-    rows = bench_latency()
-    all_rows += rows
-    for r in rows:
-        print(f"latency/{r['workload']}/{r['scheme']},{r['avg_us']},"
-              f"v16={r['v16']}us v4096={r['v4096']}us")
+    if want("latency"):
+        rows = bench_latency()
+        all_rows += rows
+        for r in rows:
+            print(f"latency/{r['workload']}/{r['scheme']},{r['avg_us']},"
+                  f"v16={r['v16']}us v4096={r['v4096']}us")
 
-    rows = bench_throughput()
-    all_rows += rows
-    for r in rows:
-        us = 1e3 / r["avg_kops"] if r["avg_kops"] else float("nan")
-        print(f"throughput/{r['workload']}/{r['scheme']},{us:.2f},"
-              f"avg={r['avg_kops']}KOp/s t16={r['t16']}KOp/s")
+    if want("throughput"):
+        rows = bench_throughput()
+        all_rows += rows
+        for r in rows:
+            us = 1e3 / r["avg_kops"] if r["avg_kops"] else float("nan")
+            print(f"throughput/{r['workload']}/{r['scheme']},{us:.2f},"
+                  f"avg={r['avg_kops']}KOp/s t16={r['t16']}KOp/s")
 
-    rows = bench_cpu_cost()
-    all_rows += rows
-    for r in rows:
-        print(f"cpu_cost/v{r['value_size']}/{r['workload']},,"
-              f"redo={r['redo']}x raw={r['raw']}x")
+    if want("cpu_cost"):
+        rows = bench_cpu_cost()
+        all_rows += rows
+        for r in rows:
+            print(f"cpu_cost/v{r['value_size']}/{r['workload']},,"
+                  f"redo={r['redo']}x raw={r['raw']}x")
 
-    rows = bench_cleaning()
-    all_rows += rows
-    for r in rows:
-        print(f"cleaning/{r['workload']},{r['during_cleaning_us']},"
-              f"normal={r['normal_us']}us")
+    if want("cleaning"):
+        rows = bench_cleaning()
+        all_rows += rows
+        for r in rows:
+            print(f"cleaning/{r['workload']},{r['during_cleaning_us']},"
+                  f"normal={r['normal_us']}us")
 
-    from benchmarks.figures import bench_cluster_scaling
-    rows = bench_cluster_scaling()
-    all_rows += rows
-    for r in rows:
-        us = 1e3 / r["avg_kops"] if r["avg_kops"] else float("nan")
-        print(f"cluster/{r['workload']}/shards{r['n_shards']},{us:.2f},"
-              f"avg={r['avg_kops']}KOp/s t64={r['t64']}KOp/s")
+    if want("cluster"):
+        from benchmarks.figures import bench_cluster_scaling
+        rows = bench_cluster_scaling()
+        all_rows += rows
+        for r in rows:
+            us = 1e3 / r["avg_kops"] if r["avg_kops"] else float("nan")
+            print(f"cluster/{r['workload']}/shards{r['n_shards']},{us:.2f},"
+                  f"avg={r['avg_kops']}KOp/s t64={r['t64']}KOp/s")
 
-    from benchmarks.figures import bench_batching
-    rows = bench_batching()
-    all_rows += rows
-    for r in rows:
-        print(f"batching/{r['scheme']}/{r['op']},{r['b8']},"
-              f"seq={r['seq_us']}us b1={r['b1']}us b16={r['b16']}us "
-              f"ratio_b8={r['amortized_ratio_b8']}")
+    if want("batching"):
+        from benchmarks.figures import bench_batching
+        rows = bench_batching()
+        all_rows += rows
+        for r in rows:
+            print(f"batching/{r['scheme']}/{r['op']},{r['b8']},"
+                  f"seq={r['seq_us']}us b1={r['b1']}us b16={r['b16']}us "
+                  f"ratio_b8={r['amortized_ratio_b8']}")
 
-    from repro.core import ServerConfig, make_store
-    from repro.workloads.ycsb import run_store_workload
-    rows = []
-    for scheme, kw in (("erda", {}), ("erda-cluster", {"n_shards": 4})):
-        cfg = ServerConfig(device_size=64 << 20, table_capacity=1 << 13,
-                           n_heads=2, region_size=2 << 20, segment_size=64 << 10)
-        r = run_store_workload(make_store(scheme, cfg=cfg, **kw), "ycsb_b",
-                               n_ops=4000, n_keys=400, value_size=256)
-        r["figure"] = "ycsb_driver"
-        r["scheme"] = scheme
-        rows.append(r)
-        print(f"ycsb_driver/{r['workload']}/{scheme},,"
-              f"reads={r['reads']} writes={r['writes']} "
-              f"one_sided_reads={r['store_stats'].get('one_sided_reads')}")
-    all_rows += rows
+    if want("replication"):
+        from benchmarks.figures import bench_replication
+        rows = bench_replication()
+        all_rows += rows
+        for r in rows:
+            print(f"replication/v{r['value_size']}/{r['op']},{r['repl_b8']},"
+                  f"unrepl_b8={r['unrepl_b8']}us ratio_b1={r['ratio_b1']} "
+                  f"ratio_b8={r['ratio_b8']}")
 
-    rows = bench_nvm_writes()
-    all_rows += rows
-    for r in rows:
-        if "create" in r:
-            print(f"nvm_writes/v{r['value_size']}/{r['scheme']},,"
-                  f"create={r['create']}B update={r['update']}B delete={r['delete']}B")
+    if want("ycsb_driver"):
+        from repro.core import ServerConfig, make_store
+        from repro.workloads.ycsb import run_store_workload
+        rows = []
+        for scheme, kw in (("erda", {}), ("erda-cluster", {"n_shards": 4})):
+            cfg = ServerConfig(device_size=64 << 20, table_capacity=1 << 13,
+                               n_heads=2, region_size=2 << 20, segment_size=64 << 10)
+            r = run_store_workload(make_store(scheme, cfg=cfg, **kw), "ycsb_b",
+                                   n_ops=4000, n_keys=400, value_size=256)
+            r["figure"] = "ycsb_driver"
+            r["scheme"] = scheme
+            rows.append(r)
+            print(f"ycsb_driver/{r['workload']}/{scheme},,"
+                  f"reads={r['reads']} writes={r['writes']} "
+                  f"one_sided_reads={r['store_stats'].get('one_sided_reads')}")
+        all_rows += rows
 
-    rows = bench_kernels()
-    all_rows += rows
-    for r in rows:
-        print(f"kernel/{r['name'].replace(' ', '_')},{r['pallas_us']},"
-              f"ref={r['ref_us']}us")
+    if want("nvm_writes"):
+        rows = bench_nvm_writes()
+        all_rows += rows
+        for r in rows:
+            if "create" in r:
+                print(f"nvm_writes/v{r['value_size']}/{r['scheme']},,"
+                      f"create={r['create']}B update={r['update']}B delete={r['delete']}B")
 
-    from benchmarks.checkpoint_bench import bench_checkpoint
-    rows = bench_checkpoint()
-    all_rows += rows
-    for r in rows:
-        print(f"checkpoint/{r['name'].replace(' ', '_')},,"
-              f"erda_wamp={r['write_amplification_erda']} "
-              f"redo_wamp={r['write_amplification_redo']} ratio={r['ratio']}")
+    if want("kernels"):
+        rows = bench_kernels()
+        all_rows += rows
+        for r in rows:
+            print(f"kernel/{r['name'].replace(' ', '_')},{r['pallas_us']},"
+                  f"ref={r['ref_us']}us")
 
-    if not args.skip_roofline:
+    if want("checkpoint"):
+        from benchmarks.checkpoint_bench import bench_checkpoint
+        rows = bench_checkpoint()
+        all_rows += rows
+        for r in rows:
+            print(f"checkpoint/{r['name'].replace(' ', '_')},,"
+                  f"erda_wamp={r['write_amplification_erda']} "
+                  f"redo_wamp={r['write_amplification_redo']} ratio={r['ratio']}")
+
+    if not args.skip_roofline and want("roofline"):
         from benchmarks.roofline_report import summarize
         try:
             rows = summarize()

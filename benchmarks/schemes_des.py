@@ -161,6 +161,44 @@ def capture_cluster_batch_traces(vsize: int, batch: int, n_shards: int = 4,
     return traces
 
 
+def capture_replicated_write_traces(vsize: int, batch: int,
+                                    p: SimParams | None = None) -> Dict[str, list]:
+    """Per-lane DES step traces of ONE mirrored ``multi_write`` of ``batch``
+    keys on a ``replication=2`` shard group: ``{"write": [primary_steps,
+    backup_steps]}``.  The two lanes are separate QPs/transports, so the
+    traces replay as CONCURRENT processes (``overlapped_latency_us``) — the
+    mirror costs a second doorbell chain on its own lane, not a serialized
+    second round trip."""
+    p = p or SimParams()
+    key = ("replicated", vsize, batch) + dataclasses.astuple(p)
+    hit = _trace_cache.get(key)
+    if hit is not None:
+        return hit
+    factory = lambda dev: SimTransport(dev, p)
+    store = make_store("erda-cluster", n_shards=1, cfg=_CAPTURE_CFG,
+                       transport_factory=factory, replication=2)
+    keys = list(range(1, batch + 1))
+    items = [(k, bytes([k % 251]) * vsize) for k in keys]
+    store.multi_write(items)  # warm: create objects, settle size caches
+    store.multi_write(items)
+    group = store.cluster.groups[0]
+    transports = [group.primary.transport, group.backup.transport]
+    for t in transports:
+        t.take_steps()
+    store.multi_write(items)  # the measured mirrored batch
+    traces = {"write": [t.take_steps() for t in transports]}
+    _trace_cache[key] = traces
+    return traces
+
+
+def replicated_write_latency_us(vsize: int, batch: int,
+                                p: SimParams | None = None) -> float:
+    """Amortized per-op latency of a mirrored batched write: both lanes'
+    traces replayed concurrently, done when the slower lane drains."""
+    traces = capture_replicated_write_traces(vsize, batch, p)
+    return overlapped_latency_us(traces["write"], p) / batch
+
+
 def overlapped_latency_us(per_shard_steps: list,
                           p: SimParams | None = None) -> float:
     """Completion time of per-shard step traces replayed as concurrent DES
@@ -195,6 +233,7 @@ def make_sim(p: SimParams, n_shards: int = 1):
 
 
 __all__ = ["batched_latency_us", "capture_batch_traces",
-           "capture_cluster_batch_traces", "capture_op_traces", "make_sim",
-           "op_cpu_us", "op_latency_us", "overlapped_latency_us",
-           "replay_steps"]
+           "capture_cluster_batch_traces", "capture_op_traces",
+           "capture_replicated_write_traces", "make_sim", "op_cpu_us",
+           "op_latency_us", "overlapped_latency_us",
+           "replay_steps", "replicated_write_latency_us"]

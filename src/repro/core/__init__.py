@@ -8,6 +8,7 @@ from repro.core.api import (ALL_SCHEMES, ALL_STORES, ErdaClusterStore,
                             ErdaStore, make_store)
 from repro.core.client import ErdaClient
 from repro.core.cluster import ErdaCluster, HashRing
+from repro.core.replication import ShardDownError, ShardGroup
 from repro.core.server import DataLossError, ErdaServer, ServerConfig
 
 __all__ = [
@@ -21,5 +22,7 @@ __all__ = [
     "ErdaStore",
     "HashRing",
     "ServerConfig",
+    "ShardDownError",
+    "ShardGroup",
     "make_store",
 ]

@@ -82,10 +82,10 @@ class ErdaClusterStore:
 
     def __init__(self, n_shards: int = 4, cfg: Optional[ServerConfig] = None,
                  transport_factory: Optional[TransportFactory] = None,
-                 vnodes: int = 64):
+                 vnodes: int = 64, replication: int = 1):
         self.cluster = ErdaCluster(n_shards=n_shards, cfg=cfg,
                                    transport_factory=transport_factory,
-                                   vnodes=vnodes)
+                                   vnodes=vnodes, replication=replication)
 
     def write(self, key: int, value: bytes) -> None:
         self.cluster.write(key, value)
@@ -108,6 +108,14 @@ class ErdaClusterStore:
 
     def recover_shard(self, shard: int):
         return self.cluster.recover_shard(shard)
+
+    def fail_shard(self, shard: int) -> None:
+        """Simulate losing the shard's primary replica (NVM loss)."""
+        self.cluster.fail_shard(shard)
+
+    def failover(self, shard: int):
+        """Promote the shard's backup replica to primary (replication=2)."""
+        return self.cluster.failover(shard)
 
     def compact(self) -> int:
         return self.cluster.compact()

@@ -204,13 +204,21 @@ class ErdaClient:
         paths — cleaning-head keys, CRC fallbacks, size-miss re-reads — drop
         to the sequential code so the batched path stays the common case.
         Observationally equivalent to k sequential ``read()`` calls; issues
-        exactly the same verbs."""
+        exactly the same verbs per DISTINCT key — duplicate keys within one
+        batch collapse to a single fetch (the batch reads a snapshot, so
+        every occurrence returns the same value)."""
         out: List[Optional[bytes]] = [None] * len(keys)
+        first: Dict[int, int] = {}       # key -> index of its first occurrence
+        dups: List[Tuple[int, int]] = []  # (duplicate index, first index)
         metas: List[Tuple[int, int, List[Handle]]] = []
         objs: List[Tuple[int, int, int, Handle]] = []
         with self.transport.batch() as b:
             for i, key in enumerate(keys):
                 self.stats["reads"] += 1
+                if key in first:
+                    dups.append((i, first[key]))
+                    continue
+                first[key] = i
                 if self.server.is_cleaning(key):
                     # §4.4 send path (a blocking verb inside the batch acts as
                     # a fence for this lane — correctness over amortization on
@@ -235,7 +243,40 @@ class ErdaClient:
             _tag, off_new, _off_old = layout.unpack_word(word)
             rec = self._parse_object(key, off_new, h.result)
             out[i] = self._finish_read(key, word, rec)
+        for i, j in dups:
+            out[i] = out[j]
         return out
+
+    # ----------------------------------------------------- posted write legs
+    # The two legs of a write as individually postable WRs, so coordinators
+    # (batched multi-writes, the replication layer's mirrored lanes) can ride
+    # several writes — or the same write on two replicas' QPs — on shared
+    # doorbells: post_write_req(s) → fence → post_data_write(s) → finish.
+    def post_write_req(self, key: int, val_len: int, *,
+                       delete: bool = False) -> Handle:
+        """Post the metadata write_with_imm leg (the server's atomic flip);
+        ``h.result`` is (addr, size) once a fence/doorbell completes it."""
+        self.stats["send_ops"] += 1
+        return self.transport.post(
+            WorkRequest("write_with_imm", op="erda.write_req",
+                        handler=lambda: self.server.handle_write_req(
+                            key, val_len, delete=delete)),
+            qp=self.qp)
+
+    def post_data_write(self, addr: int, rec: bytes) -> Handle:
+        """Post the one-sided data write leg at the flip-returned address."""
+        return self._post_os_write(addr, rec)
+
+    def finish_write(self, key: int, addr: int, size: int, *,
+                     delete: bool = False) -> None:
+        """Book-keeping tail of a completed write (size hints + test hook)."""
+        if delete:
+            # a recreate may be any size; a stale hint would force the
+            # size-miss re-read path needlessly
+            self.size_cache.pop(key, None)
+        else:
+            self.size_cache[key] = size
+        self._post_write(key, addr, size)
 
     # ------------------------------------------------------------- write path
     def write(self, key: int, value: bytes) -> None:
@@ -284,22 +325,16 @@ class ErdaClient:
                     addr, size = self._send_write_cleaning(key, rec, len(value))
                     done.append((key, addr, size))
                     continue
-                self.stats["send_ops"] += 1
-                h = self.transport.post(
-                    WorkRequest("write_with_imm", op="erda.write_req",
-                                handler=lambda k=key, n=len(value):
-                                    self.server.handle_write_req(k, n)),
-                    qp=self.qp)
-                imms.append((key, value, rec, h))
+                imms.append((key, value, rec,
+                             self.post_write_req(key, len(value))))
             b.fence()  # metadata flip completes before its dependent data write
             for key, _value, rec, h in imms:
                 addr, size = h.result
-                self._post_os_write(addr, rec)
+                self.post_data_write(addr, rec)
                 done.append((key, addr, size))
         self.transport.poll(self.qp)
         for key, addr, size in done:
-            self.size_cache[key] = size
-            self._post_write(key, addr, size)
+            self.finish_write(key, addr, size)
 
     def delete(self, key: int) -> None:
         self.stats["writes"] += 1

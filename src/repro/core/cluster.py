@@ -12,6 +12,15 @@ first point clockwise of ``hash(key)``.  Virtual nodes keep the load spread
 even, and growing the cluster by one shard relocates only ~1/(n+1) of the key
 space — the property that makes online resharding feasible later.
 
+Availability (``replication=2``): every ring slot is a ``ShardGroup`` — a
+primary replica plus a backup replica placed on the ring-successor host — and
+every write mirrors both of its legs to the backup on the backup's own QP
+within the same batch scopes (see ``repro.core.replication``).  Reads stay
+one-sided against the primary.  ``fail_shard(i)`` simulates losing the
+primary's NVM; ``failover(i)`` promotes the backup (§4.2 sweep + client
+reconnect); ``recover_shard(i)`` then re-syncs a fresh rejoining replica from
+the survivor's log and reinstalls mirroring.
+
 Cluster-wide coordination:
   * ``recover()``         — run the §4.2 crash-recovery scan on every shard
                             (or one shard via ``recover_shard``): shards
@@ -28,29 +37,46 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.client import ErdaClient
 from repro.core.hashtable import splitmix64
+from repro.core.replication import ShardDownError, ShardGroup
 from repro.core.server import ErdaServer, ServerConfig
 from repro.nvmsim.device import NVMDevice
 
 
 class HashRing:
-    """Consistent-hash ring with virtual nodes over the u64 hash space."""
+    """Consistent-hash ring with virtual nodes over the u64 hash space.
 
-    def __init__(self, n_shards: int, vnodes: int = 64):
+    Each shard's vnode points are ``splitmix64(splitmix64(shard + 1) ^ v)`` —
+    a per-shard seeded stream, so a vnode index can never bleed into the shard
+    field no matter how large ``vnodes`` grows (the old ``(shard << 20) | v``
+    derivation collided across shards once ``v`` exceeded 2**20).  Points sort
+    by the explicit ``(hash, shard)`` pair, so an equal-hash tie breaks the
+    same way on every rebuild regardless of shard insertion order, and a key
+    whose hash lands exactly ON a point belongs to THAT point's shard
+    (``bisect_left``; first point clockwise, inclusive)."""
+
+    def __init__(self, n_shards: int, vnodes: int = 64,
+                 shard_ids: Optional[Sequence[int]] = None):
         if n_shards < 1:
             raise ValueError("cluster needs at least one shard")
         self.n_shards = n_shards
         self.vnodes = vnodes
+        ids = list(shard_ids) if shard_ids is not None else list(range(n_shards))
+        if len(ids) != n_shards:
+            raise ValueError("shard_ids must name every shard exactly once")
         points = []
-        for shard in range(n_shards):
+        for shard in ids:
+            seed = splitmix64(shard + 1)
             for v in range(vnodes):
-                points.append((splitmix64((shard << 20) | v), shard))
-        points.sort()
+                points.append((splitmix64(seed ^ v), shard))
+        points.sort()  # (hash, shard): deterministic tie-break
+        self._points = points
         self._hashes = [h for h, _ in points]
         self._shards = [s for _, s in points]
 
     def shard_for(self, key: int) -> int:
         h = splitmix64(key ^ 0x5BD1E995)
-        i = bisect.bisect_right(self._hashes, h)
+        # bisect_left: a key hashing exactly onto a point is owned by it
+        i = bisect.bisect_left(self._hashes, h)
         if i == len(self._hashes):
             i = 0  # wrap around the ring
         return self._shards[i]
@@ -64,37 +90,62 @@ SHARD_CONFIG = ServerConfig(device_size=64 << 20, table_capacity=1 << 14)
 class ErdaCluster:
     def __init__(self, n_shards: int = 4, cfg: Optional[ServerConfig] = None,
                  transport_factory: Optional[Callable[[NVMDevice], object]] = None,
-                 vnodes: int = 64):
-        cfg = cfg or SHARD_CONFIG
+                 vnodes: int = 64, replication: int = 1):
+        if replication not in (1, 2):
+            raise ValueError("replication must be 1 (none) or 2 (primary-backup)")
+        self.cfg = cfg = cfg or SHARD_CONFIG
+        self.replication = replication
+        self._transport_factory = transport_factory
         self.ring = HashRing(n_shards, vnodes)
-        self.servers: List[ErdaServer] = [ErdaServer(cfg) for _ in range(n_shards)]
         # each shard connection gets its own QP lane, so per-shard batches are
-        # independently doorbell'd and their completions overlap across shards
-        self.clients: List[ErdaClient] = [
-            ErdaClient(s, client_id=i, qp=i,
-                       transport=transport_factory(s.dev) if transport_factory else None)
-            for i, s in enumerate(self.servers)
-        ]
+        # independently doorbell'd and their completions overlap across shards;
+        # backup replicas ride lanes n_shards + i
+        self.groups: List[ShardGroup] = []
+        for i in range(n_shards):
+            primary = self._connect(ErdaServer(cfg), lane=i)
+            backup = backup_host = None
+            if replication == 2:
+                backup_host = (i + 1) % n_shards  # ring-successor placement
+                backup = self._connect(ErdaServer(cfg), lane=n_shards + i)
+            self.groups.append(ShardGroup(i, primary, backup,
+                                          backup_host=backup_host))
+
+    def _connect(self, server: ErdaServer, lane: int) -> ErdaClient:
+        t = self._transport_factory(server.dev) if self._transport_factory else None
+        return ErdaClient(server, client_id=lane, qp=lane, transport=t)
 
     @property
     def n_shards(self) -> int:
-        return len(self.servers)
+        return len(self.groups)
+
+    @property
+    def servers(self) -> List[ErdaServer]:
+        """The CURRENT primary replica server of every shard."""
+        return [g.primary.server for g in self.groups]
+
+    @property
+    def clients(self) -> List[ErdaClient]:
+        """The CURRENT primary replica connection of every shard."""
+        return [g.primary for g in self.groups]
 
     def shard_for_key(self, key: int) -> int:
         return self.ring.shard_for(key)
 
     def client_for_key(self, key: int) -> ErdaClient:
-        return self.clients[self.ring.shard_for(key)]
+        return self.groups[self.ring.shard_for(key)].primary
+
+    def group_for_key(self, key: int) -> ShardGroup:
+        return self.groups[self.ring.shard_for(key)]
 
     # ------------------------------------------------------------------ kv ops
     def read(self, key: int) -> Optional[bytes]:
-        return self.client_for_key(key).read(key)
+        return self.group_for_key(key).read(key)
 
     def write(self, key: int, value: bytes) -> None:
-        self.client_for_key(key).write(key, value)
+        self.group_for_key(key).write(key, value)
 
     def delete(self, key: int) -> None:
-        self.client_for_key(key).delete(key)
+        self.group_for_key(key).delete(key)
 
     # ------------------------------------------------------------- batched ops
     def multi_read(self, keys: Sequence[int]) -> List[Optional[bytes]]:
@@ -107,7 +158,7 @@ class ErdaCluster:
             by_shard.setdefault(self.ring.shard_for(key), []).append(i)
         out: List[Optional[bytes]] = [None] * len(keys)
         for shard, idxs in by_shard.items():
-            vals = self.clients[shard].multi_read([keys[i] for i in idxs])
+            vals = self.groups[shard].multi_read([keys[i] for i in idxs])
             for i, v in zip(idxs, vals):
                 out[i] = v
         return out
@@ -119,16 +170,56 @@ class ErdaCluster:
         for key, value in items:
             by_shard.setdefault(self.ring.shard_for(key), []).append((key, value))
         for shard, shard_items in by_shard.items():
-            self.clients[shard].multi_write(shard_items)
+            self.groups[shard].multi_write(shard_items)
+
+    # ---------------------------------------------------------------- failover
+    def fail_shard(self, shard: int) -> None:
+        """Simulate shard ``shard``'s primary replica crashing: ops on the
+        shard raise ``ShardDownError`` until either ``failover`` (the NVM is
+        lost, promote the backup) or ``recover_shard`` (crash-restart with
+        media intact, §4.2 repair in place)."""
+        self.groups[shard].fail_primary()
+
+    def failover(self, shard: int) -> Dict[str, int]:
+        """Promote shard ``shard``'s backup to primary: §4.2 recovery sweep
+        on the promoted replica + client reconnect.  The group keeps serving
+        reads and (unmirrored) writes until ``recover_shard`` re-syncs a new
+        backup."""
+        g = self.groups[shard]
+        g.promote()
+        return {"promotions": g.promotions,
+                "keys": g.primary.server.table.n_items}
 
     # ---------------------------------------------------------------- recovery
     def recover_shard(self, shard: int) -> Dict[str, int]:
-        """Independent §4.2 recovery of one failed shard; other shards keep
-        serving untouched."""
-        stats = self.servers[shard].recover()
+        """Repair one shard.  Unreplicated (or backup intact): the §4.2
+        recovery scan on each replica, clients reconnect.  After a failover
+        (replicated group running degraded): build a fresh rejoining replica
+        and re-sync it from the survivor's log; other shards keep serving
+        untouched either way."""
+        g = self.groups[shard]
+        if self.replication == 2 and g.backup is None:
+            # degraded group: §4.2-sweep the surviving primary FIRST (its
+            # volatile index/tail need the rebuild like any other shard's),
+            # then stream its repaired state into a fresh rejoining replica
+            stats = g.primary.server.recover()
+            g.primary.reconnect()
+            joiner = self._connect(ErdaServer(self.cfg),
+                                   lane=self.n_shards + shard)
+            stats["resynced"] = g.resync_backup(joiner)
+            g.backup_host = (shard + 1) % self.n_shards
+            return stats
+        stats = g.primary.server.recover()
         # the shard's clients reconnect: size hints may be stale-but-safe
         # (CRC re-verifies), the connection-time constants must be refreshed
-        self.clients[shard].reconnect()
+        g.primary.reconnect()
+        if g.backup is not None:
+            for k, v in g.backup.server.recover().items():
+                stats[f"backup_{k}"] = v
+            g.backup.reconnect()
+        # the repaired primary is back: a crash-restart shard (failed but
+        # never failed-over) resumes serving
+        g.primary_down = False
         return stats
 
     def recover(self) -> Dict[str, int]:
@@ -154,10 +245,23 @@ class ErdaCluster:
     # ------------------------------------------------------------------- stats
     @property
     def stats(self) -> Dict[str, int]:
-        """Aggregated client op counters across all shards."""
+        """Aggregated PRIMARY-connection op counters across all shards (the
+        client-observed protocol cost; mirror-lane traffic is in
+        ``replica_stats``)."""
         total: Dict[str, int] = {}
         for c in self.clients:
             for k, v in c.stats.items():
+                total[k] = total.get(k, 0) + v
+        return total
+
+    @property
+    def replica_stats(self) -> Dict[str, int]:
+        """Aggregated backup-lane op counters (mirrored-write traffic)."""
+        total: Dict[str, int] = {}
+        for g in self.groups:
+            if g.backup is None:
+                continue
+            for k, v in g.backup.stats.items():
                 total[k] = total.get(k, 0) + v
         return total
 

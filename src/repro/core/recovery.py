@@ -17,11 +17,31 @@ from __future__ import annotations
 
 from typing import Dict
 
+import numpy as np
+
 from repro.core import layout
 
 
 def _align8(n: int) -> int:
     return (n + 7) & ~7
+
+
+def _tail_after_scan(dev, region, last_valid_end: int) -> int:
+    """Recovered tail for the head's tail region: never before the end of the
+    last valid record the scan found there, and never inside a torn hole.
+
+    A cut-off one-sided write leaves a partially-persisted record (the hole)
+    at the old tail; placing the tail at the last *valid* record's end would
+    let post-recovery writes land inside bytes a torn write touched — and a
+    miscounted scan would even overwrite surviving records.  The region is
+    bump-allocated (fresh NVM is zero), so the dirty extent = everything up to
+    the last nonzero byte; the tail goes past it, 8-aligned.  Trailing zeros
+    of a *valid* record are covered by ``last_valid_end``; trailing zeros of a
+    torn record are indistinguishable from free space and safe to reuse."""
+    seg = dev.mem[last_valid_end:region.end]
+    nz = np.flatnonzero(seg)
+    dirty_end = last_valid_end + _align8(int(nz[-1]) + 1) if nz.size else last_valid_end
+    return min(max(last_valid_end, dirty_end), region.end)
 
 
 def recover_server(server) -> Dict[str, int]:
@@ -35,19 +55,21 @@ def recover_server(server) -> Dict[str, int]:
         stats["heads"] += 1
         head.cleaning = False
         head.index = []
-        last_end = head.regions[0].start
         for region in head.regions:
             off = region.start
+            last_valid_end = region.start  # end of last valid record HERE
             while off + layout.HEADER_SIZE <= region.end:
                 rec = layout.parse_record(dev.mem, off, max_len=region.end - off)
                 if rec.ok:
                     head.index.append(_mkref(off, rec))
                     stats["valid_records"] += 1
                     off += _align8(rec.size)
-                    last_end = off
+                    last_valid_end = off
                 else:
                     off += 8  # resync scan
-        head.tail = max(last_end, head.regions[-1].start)
+        # the tail lives in the LAST region of the chain; `last_valid_end`
+        # now holds that region's last valid record end
+        head.tail = _tail_after_scan(dev, head.regions[-1], last_valid_end)
 
     # repair metadata (the paper's recovery step)
     table = server.table

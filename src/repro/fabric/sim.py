@@ -29,6 +29,15 @@ call-and-return verb — the paper-calibration numbers (Erda read ≈ 62 µs,
 baseline read ≈ 92 µs) are unchanged — while a chain of k WRs amortizes the
 fixed RTT k ways, which is the entire win ``batch()`` exists to model.
 
+Doorbells are strictly **per lane**: a ``batch()`` (and its ``fence()``)
+rings only the lanes posted within that batch, so each QP's chain is priced
+independently.  That is what makes *mirror chains* (the replication layer's
+primary + backup write legs, posted on two lanes of two transports inside
+the same batch scopes) price as OVERLAPPED: each lane's steps replay as its
+own concurrent DES process (``overlapped_latency_us``), and the mirrored
+batch completes when the slower lane drains — never as a serialized second
+round trip.
+
 The per-op CPU service-time table lives in ``_service`` — ONE place, keyed by
 protocol op label, calibrated against the paper's measured averages exactly as
 ``netsim.verbs`` documents (one-sided RTT ≈ 30 µs → Erda read ≈ 62 µs;

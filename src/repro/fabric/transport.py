@@ -116,32 +116,76 @@ class Handle:
 
 class _Batch:
     """Doorbell-batching scope: posts accumulate; ONE doorbell per lane rings
-    at exit.  ``fence()`` rings immediately — the explicit ordering point."""
+    at exit.  ``fence()`` rings immediately — the explicit ordering point.
+
+    A batch owns only the WRs posted *through it* (``posted``) and their
+    lanes (``lanes``): a fence or exit rings exactly those doorbells, and an
+    abort drops exactly those WQEs.  On a transport shared by several
+    connections, WQEs another caller posted on its own lane stay posted —
+    client A fencing or aborting its batch must never ring client B's
+    doorbell nor drop B's (or an enclosing batch's) queued work."""
 
     def __init__(self, transport: "InProcessTransport"):
         self.t = transport
+        self.lanes: set = set()
+        self.posted: List[Handle] = []
 
     def __enter__(self) -> "_Batch":
-        self.t._batch_depth += 1
+        self.t._batch_stack.append(self)
         return self
 
     def __exit__(self, exc_type, exc, tb) -> bool:
-        self.t._batch_depth -= 1
-        if self.t._batch_depth == 0:
-            if exc_type is None:
-                self.t.flush()
-            else:
-                # aborted batch: posted-but-not-doorbelled WQEs never reach
-                # the NIC — drop them instead of letting a later unrelated
-                # doorbell execute stale work
-                self.t._abort_posted()
+        t = self.t
+        if t._batch_stack and t._batch_stack[-1] is self:
+            t._batch_stack.pop()
+        if exc_type is not None:
+            # aborted batch: this batch's posted-but-not-doorbelled WQEs
+            # never reach the NIC — drop them instead of letting a later
+            # unrelated doorbell execute stale work
+            self._abort()
+        elif not t._batch_stack:
+            self._ring_own()
+        else:
+            # nested batch merges into its parent: the outer scope's single
+            # doorbell covers these lanes
+            parent = t._batch_stack[-1]
+            parent.lanes |= self.lanes
+            parent.posted += self.posted
+            self.lanes, self.posted = set(), []
         return False
 
     def fence(self) -> None:
         """Ring now: everything posted so far completes before anything
         posted after — used where the protocol genuinely orders (e.g. the
-        metadata flip a dependent data write needs the address from)."""
-        self.t.flush()
+        metadata flip a dependent data write needs the address from).
+        Rings ONLY this batch's lanes."""
+        self._ring_own()
+
+    def _ring_own(self) -> None:
+        """Ring the doorbell of every lane posted within this batch.  A chain
+        that faults drops THIS batch's remaining posted WQEs (flush-with-error
+        scoped to the batch) and propagates."""
+        lanes, self.lanes = sorted(self.lanes), set()
+        posted, self.posted = self.posted, []
+        try:
+            for lane in lanes:
+                self.t._ring(lane)
+        except BaseException:
+            self._drop(posted)
+            raise
+
+    def _abort(self) -> None:
+        """Discard this batch's queued-but-unrung WRs — and only this
+        batch's: an enclosing batch's WQEs sharing a lane stay posted."""
+        posted, self.posted = self.posted, []
+        self._drop(posted)
+        self.lanes = set()
+
+    def _drop(self, posted: List[Handle]) -> None:
+        for h in posted:
+            q = self.t._sq.get(h.qp)
+            if q and h in q:
+                q.remove(h)
 
 
 @runtime_checkable
@@ -187,7 +231,7 @@ class InProcessTransport:
         self.trace: List[OpRecord] = []
         self._sq: Dict[int, List[Handle]] = {}  # per-QP send queues (posted)
         self._cq: Dict[int, List[Handle]] = {}  # per-QP completion queues
-        self._batch_depth = 0
+        self._batch_stack: List[_Batch] = []  # innermost batch owns new posts
 
     # ------------------------------------------------------------- bookkeeping
     def _note(self, verb: str, op: str, nbytes: int) -> None:
@@ -205,8 +249,13 @@ class InProcessTransport:
         rings immediately (one WR, one doorbell — the classic blocking verb)."""
         h = Handle(wr, qp)
         self._sq.setdefault(qp, []).append(h)
-        if self._batch_depth == 0:
+        if not self._batch_stack:
             self._ring(qp)
+        else:
+            # the innermost open batch owns this WR: its fence/exit (and
+            # nothing else) rings the doorbell; its abort drops it
+            self._batch_stack[-1].lanes.add(qp)
+            self._batch_stack[-1].posted.append(h)
         return h
 
     def post_many(self, wrs: List[WorkRequest], qp: int = 0) -> List[Handle]:

@@ -32,8 +32,13 @@ def _page_key(seq_id: int, name: str, idx: int) -> int:
 
 
 class ErdaKVPageStore:
-    def __init__(self, store=None, *, n_shards: int = 2):
+    def __init__(self, store=None, *, n_shards: int = 2, replication: int = 1):
+        """``replication=2`` mirrors every page write to a ring-successor
+        backup replica (repro.core.replication), so a preempted host losing a
+        shard's NVM no longer loses that shard's KV pages — failover promotes
+        the backup and decode resumes from the mirrored snapshots."""
         self.store = store or make_store("erda-cluster", n_shards=n_shards,
+                                         replication=replication,
                                          cfg=PAGE_SHARD_CONFIG)
 
     def put_page(self, seq_id: int, name: str, idx: int, array) -> None:
@@ -81,3 +86,12 @@ class ErdaKVPageStore:
         """Page eviction/compaction = the paper's lock-free log cleaning,
         swept across every shard of the backing store."""
         self.store.maybe_clean()
+
+    # ----------------------------------------------------------- availability
+    def fail_shard(self, shard: int) -> None:
+        """Simulate a serving host losing a page shard's NVM."""
+        self.store.fail_shard(shard)
+
+    def failover(self, shard: int):
+        """Promote the shard's mirrored backup; pages keep serving."""
+        return self.store.failover(shard)

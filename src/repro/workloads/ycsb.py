@@ -9,7 +9,7 @@ generating billion-record synthetic databases"), vectorized with numpy.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -134,4 +134,78 @@ def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
                 model[k] = v
     return {"workload": workload, "n_ops": len(ops), "n_keys": n_keys,
             "reads": n_reads, "writes": n_writes, "batch_size": batch_size,
+            "store_stats": dict(store.stats)}
+
+
+# ----------------------------------------------------- kill-a-shard scenario
+def run_failover_workload(store, workload: str, n_ops: int, n_keys: int,
+                          value_size: int = 128, seed: int = 0,
+                          kill_at: Optional[int] = None,
+                          shard: Optional[int] = None) -> dict:
+    """Drive a REPLICATED cluster store (``replication=2``) with a YCSB op
+    stream and kill a shard's primary replica mid-stream.
+
+    At op index ``kill_at`` (default: halfway) the current op's owning shard
+    — or ``shard`` if given — loses its primary (``fail_shard``).  Ops that
+    hit the dead shard raise ``ShardDownError``; the driver reacts the way a
+    real client library would: run ``failover`` (promote the backup) once,
+    then retry the op against the promoted replica.  Every read is checked
+    against the dict model of ACKNOWLEDGED writes — a write that raised is
+    not in the model — so the run proves zero lost acknowledged writes and
+    that reads are served by the promoted backup after the kill."""
+    from repro.core import ShardDownError
+
+    ops = make_ops(workload, n_ops, n_keys, seed)
+    rng = np.random.default_rng(seed + 2)
+    model = {}
+    for k in range(n_keys):  # load phase (keys 1-based; 0 is the empty slot)
+        v = rng.bytes(value_size)
+        store.write(k + 1, v)
+        model[k + 1] = v
+    kill_at = n_ops // 2 if kill_at is None else kill_at
+    failovers = denied = n_reads = n_writes = 0
+    killed_shard = None
+    for i, (op, k) in enumerate(ops):
+        k += 1
+        if i == kill_at:
+            killed_shard = store.shard_for_key(k) if shard is None else shard
+            store.fail_shard(killed_shard)
+        for attempt in (0, 1):
+            try:
+                if op == "read":
+                    got = store.read(k)
+                    if got != model.get(k):  # must check even under -O
+                        raise RuntimeError(f"lost acknowledged write, key {k}")
+                else:
+                    v = rng.bytes(value_size)
+                    store.write(k, v)
+                    model[k] = v  # acknowledged only when write returned
+                break
+            except ShardDownError as e:
+                denied += 1
+                if attempt:  # failover already ran — a second denial is a bug
+                    raise
+                store.failover(e.shard)
+                failovers += 1
+        if op == "read":
+            n_reads += 1
+        else:
+            n_writes += 1
+    # final sweep: every acknowledged write survives the failover.  With an
+    # explicit ``shard`` (or a kill near the stream's end) no in-stream op may
+    # have hit the dead shard, so the sweep applies the same failover-once
+    # reaction the op loop does.
+    for k, v in model.items():
+        try:
+            got = store.read(k)
+        except ShardDownError as e:
+            denied += 1
+            store.failover(e.shard)
+            failovers += 1
+            got = store.read(k)
+        if got != v:
+            raise RuntimeError(f"post-failover mismatch on key {k}")
+    return {"workload": workload, "n_ops": len(ops), "reads": n_reads,
+            "writes": n_writes, "killed_shard": killed_shard,
+            "failovers": failovers, "denied_ops": denied,
             "store_stats": dict(store.stats)}

@@ -124,6 +124,26 @@ def test_failed_multilane_flush_aborts_other_lanes():
     assert t.counts["one_sided_write"] == 1
 
 
+def test_nested_batch_abort_keeps_enclosing_batch_wrs():
+    """An aborting nested batch drops ONLY its own posted WQEs: the enclosing
+    batch's WRs on the same lane stay posted and execute at the outer ring."""
+    dev = NVMDevice(1 << 16)
+    t = InProcessTransport(dev)
+    with t.batch() as outer:
+        h_outer = t.post(WorkRequest("one_sided_write", addr=0, data=b"keepme"))
+        with pytest.raises(RuntimeError):
+            with t.batch():
+                h_inner = t.post(WorkRequest("one_sided_write", addr=64,
+                                             data=b"dropme"))
+                raise RuntimeError("inner batch aborts")
+        outer.fence()
+        assert h_outer.done and h_outer.result is None
+        assert not h_inner.done            # inner WR died with its batch
+    assert dev.read(0, 6).tobytes() == b"keepme"
+    assert dev.read(64, 6).tobytes() == b"\x00" * 6
+    assert t.counts["one_sided_write"] == 1
+
+
 def test_store_level_abort_does_not_leak_stale_metadata():
     """Reproduces the reviewed failure: multi_write aborting mid-batch (bad
     value type) must not leave key 1's metadata flip queued — the next read
@@ -206,6 +226,91 @@ def test_batched_functional_and_sim_backends_emit_identical_verb_traces():
         == [(r.verb, r.op, r.nbytes) for r in t_sim]
     assert stores[0].transport.counts == stores[1].transport.counts
     assert stores[0].transport.doorbells == stores[1].transport.doorbells
+
+
+def test_multi_read_torn_new_version_falls_back_and_repairs():
+    """Batched-read fallback path: a NEW version torn mid-batch must drop to
+    ``_finish_read``'s OLD-version fallback (read the OLD offset already in
+    hand, notify the server to repair) — with verb parity vs the same reads
+    issued sequentially."""
+    from repro.nvmsim.device import TornWrite
+
+    batched, sequential = traced_store(), traced_store()
+    keys = list(range(1, 7))
+    victim = 3
+    for s in (batched, sequential):
+        for k in keys:
+            s.write(k, bytes([k]) * 80)
+        # tear the victim's NEW version: metadata flipped, data write cut off
+        s.dev.fault.arm(countdown=0, fraction=0.5)
+        with pytest.raises(TornWrite):
+            s.write(victim, b"\xAA" * 80)
+        s.transport.take_trace()
+    got_b = batched.multi_read(keys)
+    got_s = [sequential.read(k) for k in keys]
+    expect = [bytes([k]) * 80 for k in keys]
+    assert got_b == got_s == expect          # victim served from OLD version
+    for s in (batched, sequential):
+        assert s.stats["fallbacks"] == 1 and s.stats["repairs"] == 1
+    # verb parity: the batch issues exactly the verbs of k sequential reads
+    # (incl. the fallback's extra object read + repair send), just reordered
+    def verb_census(trace):
+        census = {}
+        for r in trace:
+            census[(r.verb, r.op)] = census.get((r.verb, r.op), 0) + 1
+        return census
+    assert verb_census(batched.transport.take_trace()) \
+        == verb_census(sequential.transport.take_trace())
+    # the repair stuck: a second batched read serves NEW with no new fallback
+    assert batched.multi_read(keys) == expect
+    assert batched.stats["fallbacks"] == 1
+
+
+def test_multi_read_duplicate_keys_collapse_to_one_fetch():
+    """Duplicate keys in one batch are fetched once (snapshot semantics) —
+    no duplicated size-miss re-reads for big values, and never more verbs
+    than the same reads issued sequentially."""
+    from repro.core import ErdaClient
+
+    server = ErdaStore(CFG).server
+    writer = ErdaClient(server, client_id=0, qp=0,
+                        transport=InProcessTransport(server.dev))
+    big = b"\x7A" * 8000                   # > INITIAL_READ: size-miss path
+    writer.write(1, big)
+    batched = ErdaClient(server, client_id=1, qp=1,
+                         transport=InProcessTransport(server.dev, trace=True))
+    sequential = ErdaClient(server, client_id=2, qp=2,
+                            transport=InProcessTransport(server.dev, trace=True))
+    assert batched.multi_read([1, 1, 1]) == [big] * 3
+    got_s = [sequential.read(1) for _ in range(3)]
+    assert got_s == [big] * 3
+    assert batched.stats["reads"] == 3     # logical reads still counted
+    assert batched.transport.counts["one_sided_read"] \
+        <= sequential.transport.counts["one_sided_read"]
+    # exactly one object fetch + one size-miss re-read for the 3 occurrences
+    obj_reads = [r for r in batched.transport.take_trace()
+                 if r.verb == "one_sided_read" and r.op == "erda.object"]
+    assert len(obj_reads) == 2
+    for c in (batched, sequential):
+        assert c.stats["one_sided_reads"] == c.transport.counts["one_sided_read"]
+
+
+def test_multi_read_torn_create_mid_batch_reports_missing():
+    """Torn CREATE discovered mid-batch: both offsets dead → the key reads as
+    missing, the entry is repaired away, surrounding batch keys unaffected."""
+    from repro.nvmsim.device import TornWrite
+
+    s = traced_store()
+    for k in (1, 2):
+        s.write(k, bytes([k]) * 32)
+    s.dev.fault.arm(countdown=2, fraction=0.5)  # skip entry-body stores
+    with pytest.raises(TornWrite):
+        s.write(99, b"never-fully-existed")
+    assert s.multi_read([1, 99, 2]) == [b"\x01" * 32, None, b"\x02" * 32]
+    assert s.stats["fallbacks"] == 1 and s.stats["repairs"] == 1
+    assert s.server.table.lookup(99) is None    # repair removed the entry
+    s.write(99, b"second try")
+    assert s.multi_read([99]) == [b"second try"]
 
 
 def test_multi_ops_through_cleaning_send_path():

@@ -102,6 +102,50 @@ def test_interleaved_clients_then_recovery():
         assert c.read(1) == b"post-recovery"
 
 
+def test_fence_rings_only_own_batch_lanes():
+    """Regression: on a SHARED transport, a fence inside client A's batch must
+    ring only the lanes A posted in that batch — client B's posted-but-unfenced
+    WQEs stay posted (B never rang its doorbell)."""
+    from repro.fabric import InProcessTransport, WorkRequest
+    from repro.nvmsim.device import NVMDevice
+
+    dev = NVMDevice(1 << 16)
+    t = InProcessTransport(dev)
+    with t.batch():                      # client B's open batch, lane 1
+        hb = t.post(WorkRequest("one_sided_write", addr=0, data=b"B-posted"),
+                    qp=1)
+        with t.batch() as a_batch:       # client A's batch, lane 0
+            ha = t.post(WorkRequest("one_sided_write", addr=64, data=b"A"),
+                        qp=0)
+            a_batch.fence()              # A's ordering point
+            # A's lane rang; B's posted WQE must NOT have reached the NIC
+            assert ha.done and not hb.done
+            assert dev.read(0, 8).tobytes() == b"\x00" * 8
+            assert t.counts["one_sided_write"] == 1
+    # B's (outer) batch exit rings B's doorbell as usual
+    assert hb.done and dev.read(0, 8).tobytes() == b"B-posted"
+    assert t.doorbells == 2
+
+
+def test_fence_does_not_flush_sibling_client_lane():
+    """Two clients of one server sharing a transport: A's doorbell-batched
+    multi_write must leave B's posted WRs unrung."""
+    from repro.fabric import InProcessTransport, WorkRequest
+
+    server = ErdaServer(CFG)
+    shared = InProcessTransport(server.dev)
+    a = ErdaClient(server, client_id=0, qp=0, transport=shared)
+    ErdaClient(server, client_id=1, qp=1, transport=shared)
+    with shared.batch():                 # B posts raw WQEs on its lane
+        hb = shared.post(WorkRequest("one_sided_write", addr=server.dev.size - 8,
+                                     data=b"b-lane"), qp=1)
+        # A runs a complete mirrored-protocol batch (fence inside) on lane 0
+        a.multi_write([(1, b"alpha"), (2, b"beta")])
+        assert not hb.done               # B's doorbell was never rung by A
+    assert hb.done
+    assert a.read(1) == b"alpha" and a.read(2) == b"beta"
+
+
 def test_clients_during_cleaning_stay_consistent():
     """The §4.4 send path serializes every client's ops through the server
     while a head is being cleaned — no client may observe a stale value."""

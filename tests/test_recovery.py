@@ -101,6 +101,56 @@ def test_recovery_rebuilds_index():
         assert s.read(k) == v
 
 
+def test_recovered_tail_never_overwrites_survivors():
+    """Regression: the recovered tail must sit at the end of the last valid
+    record of the tail region — records the resync scan found AFTER a torn
+    hole included — so post-recovery writes can never overwrite survivors."""
+    s = make_store()
+    payload = {k: bytes([k % 251]) * (k % 90 + 16) for k in range(1, 25)}
+    for k, v in payload.items():
+        s.write(k, v)
+    countdown = 0 if s.server.table.lookup(9) is not None else 2
+    s.dev.fault.arm(countdown=countdown, fraction=0.5)
+    with pytest.raises(TornWrite) as ei:
+        s.write(9, b"\xEE" * 200)              # the hole, mid-log
+    hole_addr, persisted = ei.value.addr, ei.value.persisted
+    for k in range(25, 40):                    # survivors AFTER the hole
+        payload[k] = bytes([k]) * 48
+        s.write(k, payload[k])
+    s.server.recover()
+    for hd in s.server.log.heads.values():
+        # the tail sits past every record the scan indexed AND past the
+        # hole's dirty bytes: nothing surviving is handed out to new writes
+        assert all(hd.tail >= ref.offset + ref.size for ref in hd.index)
+    torn_head = s.server.log.head_for_key(9)
+    assert torn_head.tail >= hole_addr + persisted
+    # torn-write fault → recover → write → previously readable keys readable
+    for k in range(100, 140):
+        s.write(k, b"fresh-%d" % k)
+    assert s.read(9) == payload[9]             # repaired to the old version
+    for k, v in payload.items():
+        assert s.read(k) == v
+
+
+def test_recovered_tail_skips_trailing_torn_hole():
+    """A torn record at the very end of the log: the tail must land past the
+    hole's persisted (dirty) bytes, not at the last valid record's end."""
+    s = make_store()
+    for k in range(1, 8):
+        s.write(k, bytes([k]) * 64)
+    s.dev.fault.arm(countdown=0, fraction=0.6)
+    with pytest.raises(TornWrite) as ei:
+        s.write(3, b"\xBB" * 160)              # nonzero torn payload
+    hole_addr, persisted = ei.value.addr, ei.value.persisted
+    s.server.recover()
+    head = s.server.log.head_for_key(3)
+    assert head.tail >= hole_addr + persisted  # never inside the dirty hole
+    s.write(50, b"after-the-hole" * 4)
+    for k in range(1, 8):
+        assert s.read(k) == bytes([k]) * 64
+    assert s.read(50) == b"after-the-hole" * 4
+
+
 def test_atomic_word_is_never_torn():
     """The fault injector must respect the 8-byte atomicity unit."""
     s = make_store()
