@@ -251,6 +251,108 @@ def bench_replication(vsizes=(128, 1024)) -> List[Dict]:
     return rows
 
 
+# ------------------- read speculation (beyond the paper: §ROADMAP one-RTT reads)
+SPEC_HIT_RATES = [0.0, 0.25, 0.5, 0.75, 0.9, 1.0]
+
+
+def _run_spec_closed_loop(workload: str, vsize: int, n_threads: int,
+                          f_hit: float, f_miss: float, *, speculative: bool,
+                          horizon: float = 0.3, p: SimParams | None = None):
+    """Closed-loop clients whose read ops draw from the three captured
+    speculative-read traces (warm / miss / cold) at the measured location-
+    cache rates — or all-cold when ``speculative=False`` (the seed client)."""
+    from benchmarks.schemes_des import capture_spec_read_traces
+    p = p or SimParams()
+    sim, cpus, _ = make_sim(p)
+    spec_traces = capture_spec_read_traces(vsize, p)
+    write_trace = capture_op_traces("erda", vsize, p)["write"]
+    read_frac = WORKLOADS[workload].read_fraction
+    rng = np.random.default_rng(zlib.crc32(
+        f"spec/{workload}/{vsize}/{n_threads}/{speculative}".encode()) & 0xFFFF)
+
+    def op_factory():
+        if rng.random() >= read_frac:
+            return replay_steps(write_trace, cpus[0])
+        if not speculative:
+            return replay_steps(spec_traces["cold"], cpus[0])
+        u = rng.random()
+        if u < f_hit:
+            steps = spec_traces["warm"]
+        elif u < f_hit + f_miss:
+            steps = spec_traces["miss"]
+        else:
+            steps = spec_traces["cold"]
+        return replay_steps(steps, cpus[0])
+
+    clients = [ClosedLoopClient(sim, op_factory, horizon) for _ in range(n_threads)]
+    for c in clients:
+        c.start()
+    sim.run(until=horizon)
+    completed = sum(c.completed for c in clients)
+    lat = [l for c in clients for l in c.latencies]
+    return {"throughput_kops": completed / horizon / 1e3,
+            "mean_latency_us": float(np.mean(lat)) * 1e6 if lat else float("nan")}
+
+
+def bench_read_speculation(vsizes=(64, 1024)) -> List[Dict]:
+    """Speculative one-RTT reads via the client location cache.
+
+    Latency rows: DES latency of the cold path (two dependent doorbells), the
+    warm path (neighborhood + object on ONE overlapped doorbell, validated by
+    word compare) and the miss path (the speculative buffer is discarded and
+    the dependent read re-issued — the misprediction penalty), plus the
+    expected latency across hit rates where every non-hit pays the full miss
+    penalty (worst case: stale, never merely absent).  Criterion asserted by
+    CI and tests: warm ≤ 65% of cold.
+
+    Throughput rows: read-heavy YCSB-B/C closed-loop throughput with the
+    warm/miss mix measured off the functional driver (``run_store_workload``
+    counts spec_hits/spec_misses), vs the same load with speculation off
+    (every read cold) — the seed client's behavior."""
+    from benchmarks.schemes_des import spec_read_latency_us
+    from repro.core import ServerConfig
+    from repro.workloads.ycsb import run_store_workload
+    rows = []
+    for vsize in vsizes:
+        cold = spec_read_latency_us("cold", vsize)
+        warm = spec_read_latency_us("warm", vsize)
+        miss = spec_read_latency_us("miss", vsize)
+        row = {"figure": "read_speculation", "scheme": "erda", "op": "read",
+               "value_size": vsize,
+               "cold_us": round(cold, 2), "warm_us": round(warm, 2),
+               "miss_us": round(miss, 2),
+               "warm_cold_ratio": round(warm / cold, 3),
+               "miss_cold_ratio": round(miss / cold, 3),
+               # speculation wins once h·warm + (1−h)·miss < cold
+               "breakeven_hit_rate": round((miss - cold) / (miss - warm), 3)}
+        for h in SPEC_HIT_RATES:
+            row[f"hit{int(h * 100)}_us"] = round(h * warm + (1 - h) * miss, 2)
+        rows.append(row)
+    cfg = ServerConfig(device_size=64 << 20, table_capacity=1 << 13,
+                       n_heads=2, region_size=2 << 20, segment_size=64 << 10)
+    for wl in ("ycsb_b", "ycsb_c"):
+        func = run_store_workload(make_store("erda", cfg=cfg), wl,
+                                  n_ops=3000, n_keys=300, value_size=1024)
+        reads = max(func["reads"], 1)
+        f_hit = func["spec_hits"] / reads
+        f_miss = func["spec_misses"] / reads
+        spec = _run_spec_closed_loop(wl, 1024, 4, f_hit, f_miss,
+                                     speculative=True)
+        nospec = _run_spec_closed_loop(wl, 1024, 4, f_hit, f_miss,
+                                       speculative=False)
+        rows.append({"figure": "read_speculation", "scheme": "erda",
+                     "workload": wl, "value_size": 1024, "n_threads": 4,
+                     "hit_rate": round(f_hit, 3),
+                     "miss_rate": round(f_miss, 3),
+                     "spec_kops": round(spec["throughput_kops"], 1),
+                     "nospec_kops": round(nospec["throughput_kops"], 1),
+                     "spec_us": round(spec["mean_latency_us"], 2),
+                     "nospec_us": round(nospec["mean_latency_us"], 2),
+                     "speedup": round(spec["throughput_kops"]
+                                      / max(nospec["throughput_kops"], 1e-9), 3)})
+    return rows
+
+
 # ------------------------------------- cluster scaling (beyond the paper: §ROADMAP)
 CLUSTER_THREADS = [8, 16, 32, 64]
 

@@ -91,6 +91,22 @@ def main() -> None:
                   f"unrepl_b8={r['unrepl_b8']}us ratio_b1={r['ratio_b1']} "
                   f"ratio_b8={r['ratio_b8']}")
 
+    if want("read_speculation"):
+        from benchmarks.figures import bench_read_speculation
+        rows = bench_read_speculation()
+        all_rows += rows
+        for r in rows:
+            if "warm_us" in r:
+                print(f"read_speculation/v{r['value_size']},{r['warm_us']},"
+                      f"cold={r['cold_us']}us miss={r['miss_us']}us "
+                      f"warm_cold_ratio={r['warm_cold_ratio']} "
+                      f"breakeven={r['breakeven_hit_rate']}")
+            else:
+                print(f"read_speculation/{r['workload']},{r['spec_us']},"
+                      f"spec={r['spec_kops']}KOp/s "
+                      f"nospec={r['nospec_kops']}KOp/s "
+                      f"speedup={r['speedup']} hit_rate={r['hit_rate']}")
+
     if want("ycsb_driver"):
         from repro.core import ServerConfig, make_store
         from repro.workloads.ycsb import run_store_workload
@@ -105,7 +121,9 @@ def main() -> None:
             rows.append(r)
             print(f"ycsb_driver/{r['workload']}/{scheme},,"
                   f"reads={r['reads']} writes={r['writes']} "
-                  f"one_sided_reads={r['store_stats'].get('one_sided_reads')}")
+                  f"one_sided_reads={r['store_stats'].get('one_sided_reads')} "
+                  f"spec_hits={r['spec_hits']} spec_misses={r['spec_misses']} "
+                  f"spec_invalidations={r['spec_invalidations']}")
         all_rows += rows
 
     if want("nvm_writes"):

@@ -47,6 +47,23 @@ def _make_capture_store(scheme: str, p: SimParams):
     raise ValueError(f"unknown scheme {scheme!r}")
 
 
+def _clear_loc_caches(store) -> None:
+    """Drop the Erda clients' location caches so a captured 'read' trace is
+    the COLD dependent-read path.  The warm-up writes warm the location
+    cache, and a warm key reads in ONE speculative doorbell — which would
+    silently turn the paper-validation 2-RTT read figure (~62 µs) into the
+    speculative one.  The warm/miss paths are captured explicitly by
+    ``capture_spec_read_traces``.  No-op for the baselines."""
+    client = getattr(store, "client", None)
+    if client is not None:
+        client.loc_cache.clear()
+        return
+    cluster = getattr(store, "cluster", None)
+    if cluster is not None:
+        for c in cluster.clients:
+            c.loc_cache.clear()
+
+
 def capture_op_traces(scheme: str, vsize: int, p: SimParams | None = None,
                       *, cleaning: bool = False) -> Dict[str, list]:
     """Run the real store code over SimTransport once and return the captured
@@ -66,6 +83,7 @@ def capture_op_traces(scheme: str, vsize: int, p: SimParams | None = None,
         if scheme not in ("erda", "erda-cluster"):
             raise ValueError("cleaning traces only exist for Erda")
         store.server.start_cleaning(0)  # _CAPTURE_CFG has a single head
+    _clear_loc_caches(store)
     store.transport.take_steps()
     got = store.read(_CAPTURE_KEY)  # the measured op — must run even under -O
     if got != value:
@@ -90,6 +108,65 @@ def op_cpu_us(scheme: str, op: str, vsize: int,
     return steps_cpu_s(capture_op_traces(scheme, vsize, p)[op]) * 1e6
 
 
+# ------------------------------------------------------- speculative captures
+def capture_spec_read_traces(vsize: int,
+                             p: SimParams | None = None) -> Dict[str, list]:
+    """DES step traces of the three single-key read paths the location cache
+    creates, captured off the real client code:
+
+      cold — no hint: the seed's two dependent doorbells;
+      warm — valid hint: neighborhood + object on ONE doorbell, word
+             validates, speculative buffer returned;
+      miss — stale hint (another client updated the key): the speculative
+             doorbell completes but the fresh word mismatches, so the client
+             pays the dependent read at the fresh offset on top — the
+             misprediction penalty the hit-rate sweep weighs against the warm
+             win.
+    """
+    p = p or SimParams()
+    key = ("spec", vsize) + dataclasses.astuple(p)
+    hit = _trace_cache.get(key)
+    if hit is not None:
+        return hit
+    store = _make_capture_store("erda", p)
+    value = b"\xa5" * vsize
+    store.write(_CAPTURE_KEY, value)
+    store.write(_CAPTURE_KEY, value)
+    traces: Dict[str, list] = {}
+    store.client.loc_cache.clear()
+    store.transport.take_steps()
+    if store.read(_CAPTURE_KEY) != value:  # must run even under -O
+        raise RuntimeError("spec capture: cold read returned wrong value")
+    traces["cold"] = store.transport.take_steps()
+    # that cold read warmed the cache: the next read speculates and hits
+    hits_before = store.stats["spec_hits"]
+    store.transport.take_steps()
+    if store.read(_CAPTURE_KEY) != value:
+        raise RuntimeError("spec capture: warm read returned wrong value")
+    if store.stats["spec_hits"] != hits_before + 1:
+        raise RuntimeError("spec capture: warm read did not hit")
+    traces["warm"] = store.transport.take_steps()
+    # stale the hint honestly: a SECOND client connection updates the key
+    # through the full protocol, so the word this client cached mismatches
+    from repro.core.client import ErdaClient
+    ErdaClient(store.server, client_id=99).write(_CAPTURE_KEY, value)
+    misses_before = store.stats["spec_misses"]
+    store.transport.take_steps()
+    if store.read(_CAPTURE_KEY) != value:
+        raise RuntimeError("spec capture: miss read returned wrong value")
+    if store.stats["spec_misses"] != misses_before + 1:
+        raise RuntimeError("spec capture: stale read did not miss")
+    traces["miss"] = store.transport.take_steps()
+    _trace_cache[key] = traces
+    return traces
+
+
+def spec_read_latency_us(kind: str, vsize: int,
+                         p: SimParams | None = None) -> float:
+    """Uncontended latency of a cold / warm / miss single-key read."""
+    return steps_latency_s(capture_spec_read_traces(vsize, p)[kind]) * 1e6
+
+
 # ----------------------------------------------------------- batched captures
 def capture_batch_traces(scheme: str, vsize: int, batch: int,
                          p: SimParams | None = None) -> Dict[str, list]:
@@ -106,9 +183,11 @@ def capture_batch_traces(scheme: str, vsize: int, batch: int,
     keys = list(range(1, batch + 1))
     items = [(k, bytes([k % 251]) * vsize) for k in keys]
     # warm: create the objects and settle size caches so the read trace is
-    # the steady-state batched two-doorbell path
+    # the steady-state batched two-doorbell path (location hints dropped:
+    # the warm 1-doorbell batch is capture_spec_read_traces' business)
     store.multi_write(items)
     store.multi_write(items)
+    _clear_loc_caches(store)
     store.transport.take_steps()
     got = store.multi_read(keys)  # the measured op — must run even under -O
     if got != [v for _, v in items]:
@@ -147,6 +226,7 @@ def capture_cluster_batch_traces(vsize: int, batch: int, n_shards: int = 4,
     items = [(k, bytes([k % 251]) * vsize) for k in keys]
     store.multi_write(items)
     store.multi_write(items)
+    _clear_loc_caches(store)
     transports = [c.transport for c in store.cluster.clients]
     for t in transports:
         t.take_steps()
@@ -234,6 +314,7 @@ def make_sim(p: SimParams, n_shards: int = 1):
 
 __all__ = ["batched_latency_us", "capture_batch_traces",
            "capture_cluster_batch_traces", "capture_op_traces",
-           "capture_replicated_write_traces", "make_sim", "op_cpu_us",
-           "op_latency_us", "overlapped_latency_us",
-           "replay_steps", "replicated_write_latency_us"]
+           "capture_replicated_write_traces", "capture_spec_read_traces",
+           "make_sim", "op_cpu_us", "op_latency_us", "overlapped_latency_us",
+           "replay_steps", "replicated_write_latency_us",
+           "spec_read_latency_us"]

@@ -174,8 +174,12 @@ class Cleaner:
         return True
 
     # ------------------------------------------------------------------ client ops during cleaning
-    def client_write_addr(self, key: int, val_len: int, *, delete: bool = False) -> Tuple[int, int]:
-        """Server-mediated write while cleaning (clients switched to send)."""
+    def client_write_addr(self, key: int, val_len: int, *, delete: bool = False) -> Tuple[int, int, int]:
+        """Server-mediated write while cleaning (clients switched to send).
+        Returns (addr, size, word) like ``handle_write_req`` — but mid-cleaning
+        words are NOT speculation-safe (the replicate phase parks the latest
+        version at the OLD offset, and FINISH flips every word), so the client
+        drops rather than caches them."""
         table = self.server.table
         size = layout.record_size(val_len, delete=delete)
         if self.phase == "merge":
@@ -185,11 +189,13 @@ class Cleaner:
                 if delete:
                     raise KeyError(f"delete of missing key {key}")
                 table.insert(key, self.head.head_id, addr)
+                word = layout.pack_word(1, addr, layout.NULL_OFF)
             else:
                 w = table.read_word(entry.slot)
                 tag, _off_new, off_old = layout.unpack_word(w)
                 # update NEW offset region in place; tag NOT flipped (§4.4)
-                table.write_word(entry.slot, layout.pack_word(tag, addr, off_old))
+                word = layout.pack_word(tag, addr, off_old)
+                table.write_word(entry.slot, word)
             self.head.record_written(addr, key, size, delete)
         else:  # replicate: append to Region 2 after the reserved area
             addr = self.client_tail
@@ -204,17 +210,19 @@ class Cleaner:
                 # the finish-time flip leaves NEW valid (see DESIGN.md)
                 table.insert(key, self.head.head_id, addr)
                 e = table.lookup(key)
-                table.write_word(e.slot, layout.pack_word(1, addr, addr))
+                word = layout.pack_word(1, addr, addr)
+                table.write_word(e.slot, word)
             else:
                 w = table.read_word(entry.slot)
                 tag, off_new, _off_old = layout.unpack_word(w)
-                table.write_word(entry.slot, layout.pack_word(tag, off_new, addr))
+                word = layout.pack_word(tag, off_new, addr)
+                table.write_word(entry.slot, word)
             self.r2_index.append(RecordRef(addr, key, size, delete))
             if delete:
                 self.deleted_keys.add(key)
             else:
                 self.deleted_keys.discard(key)
-        return addr, size
+        return addr, size, word
 
     def client_read(self, key: int) -> Optional[bytes]:
         table = self.server.table

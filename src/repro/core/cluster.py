@@ -211,7 +211,11 @@ class ErdaCluster:
             return stats
         stats = g.primary.server.recover()
         # the shard's clients reconnect: size hints may be stale-but-safe
-        # (CRC re-verifies), the connection-time constants must be refreshed
+        # (CRC re-verifies), but the connection-time constants must be
+        # refreshed and LOCATION hints must drop — recovery may have
+        # flipped words back to OLD offsets (§4.2 repair), so a cached word
+        # could otherwise validate a superseded location.  reconnect()
+        # clears the location cache and bumps its generation.
         g.primary.reconnect()
         if g.backup is not None:
             for k, v in g.backup.server.recover().items():

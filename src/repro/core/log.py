@@ -106,6 +106,15 @@ class Head:
         return seg_start, self.tail
 
 
+def head_id_for_key(key: int, n_heads: int) -> int:
+    """The key → head mapping.  Shared by the server's ``LogSpace`` and by
+    clients: ``n_heads`` is a connection-time constant (paper §3.3), so a
+    client can compute a key's head locally — e.g. to consult its cleaning
+    view — without reaching through the server object."""
+    from repro.core.hashtable import splitmix64
+    return splitmix64(key ^ 0xABCDEF) % n_heads
+
+
 class LogSpace:
     """The head array + all heads.  Keys are mapped to heads by hash so load
     spreads across heads (the paper distinguishes heads via Head IDs)."""
@@ -119,8 +128,7 @@ class LogSpace:
         self.n_heads = n_heads
 
     def head_for_key(self, key: int) -> Head:
-        from repro.core.hashtable import splitmix64
-        return self.heads[splitmix64(key ^ 0xABCDEF) % self.n_heads]
+        return self.heads[head_id_for_key(key, self.n_heads)]
 
     def head_array(self) -> Dict[int, int]:
         """head_id → first-region pointer; sent to clients at connection

@@ -48,8 +48,10 @@ def recover_server(server) -> Dict[str, int]:
     stats = {"valid_records": 0, "repaired": 0, "removed": 0, "heads": 0}
     dev = server.dev
     # any in-flight cleaning is abandoned: Region 1 + un-flipped tags are
-    # authoritative; orphaned Region-2 bytes persist harmlessly (old versions)
-    server.cleaners.clear()
+    # authoritative; orphaned Region-2 bytes persist harmlessly (old versions).
+    # abandon_cleaning pushes a cleaning-epoch update so subscribed clients
+    # leave the §4.4 send path (and purge location hints for those heads).
+    server.abandon_cleaning()
 
     for head in server.log.heads.values():
         stats["heads"] += 1

@@ -88,6 +88,11 @@ class ShardGroup:
                 f"shard {self.shard_id}: no backup replica to promote")
         dead, survivor = self.primary, self.backup
         survivor.server.recover()
+        # reconnect() refreshes the §3.3 connection facts AND drops the
+        # location cache / bumps its generation: the promoted replica's log
+        # places every key at different offsets, where a cached-offset read
+        # would be CRC-valid but stale — the one hint class that is NOT
+        # stale-but-safe across a promotion
         survivor.reconnect()
         self.primary, self.backup = survivor, None
         self.primary_down = False
@@ -149,8 +154,9 @@ class ShardGroup:
         per lane, a fence, all 2k data writes on a second doorbell per lane.
         Acknowledged (returns) only once both lanes' completions drained."""
         p, b = self.primary, self.backup
-        if any(p.server.is_cleaning(k) or b.server.is_cleaning(k)
-               for k, _ in items):
+        # client-local cleaning views (no server reach-through): either
+        # replica's cleaner switches the whole mirrored batch to send
+        if any(p.is_cleaning(k) or b.is_cleaning(k) for k, _ in items):
             # §4.4 send path on either replica: correctness over amortization
             # on the rare path — sequential mirrored blocking writes
             for key, value in items:

@@ -11,7 +11,7 @@ The server also hosts recovery (§4.2) and the lock-free cleaner (§4.4) in
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Set, Tuple
+from typing import Callable, Dict, FrozenSet, Optional, Set, Tuple
 
 from repro.core import layout
 from repro.core.hashtable import Entry, HopscotchTable
@@ -40,6 +40,11 @@ class ErdaServer:
         self.table = HopscotchTable(self.dev, cfg.table_capacity)
         self.log = LogSpace(self.dev, cfg.n_heads, cfg.region_size, cfg.segment_size)
         self.cleaners: Dict[int, "object"] = {}  # head_id -> active Cleaner
+        # cleaning-epoch publication (§4.4): clients subscribe at connection
+        # establishment and are notified whenever the set of cleaning heads
+        # changes, so they never reach through the server to ask
+        self.cleaning_epoch = 0
+        self._cleaning_subs: Dict[object, Callable[[int, FrozenSet[int]], None]] = {}
         # registration: what one-sided clients may touch (paper §3.3)
         self.registered: Tuple[Tuple[int, int], ...] = ()
         self._register()
@@ -48,11 +53,12 @@ class ErdaServer:
         self.registered = ((0, self.dev.size),)
 
     # --------------------------------------------------------------- write path
-    def handle_write_req(self, key: int, val_len: int, *, delete: bool = False) -> Tuple[int, int]:
+    def handle_write_req(self, key: int, val_len: int, *, delete: bool = False) -> Tuple[int, int, int]:
         """write_with_imm handler.  Updates metadata FIRST (one atomic 8-byte
         store), then returns the last-written address for the client's
-        one-sided data write (paper Fig 7 order).  Returns (addr, record_size).
-        """
+        one-sided data write (paper Fig 7 order).  Returns (addr, record_size,
+        word) — the freshly published hash-table word rides back in the same
+        response so the writer can warm its location cache for free."""
         head = self.log.head_for_key(key)
         cleaner = self.cleaners.get(head.head_id)
         if cleaner is not None:
@@ -64,10 +70,12 @@ class ErdaServer:
             if delete:
                 raise KeyError(f"delete of missing key {key}")
             self.table.insert(key, head.head_id, addr)
+            word = layout.pack_word(1, addr, layout.NULL_OFF)
         else:
-            self.table.write_word(entry.slot, layout.flip_word(entry.word, addr))
+            word = layout.flip_word(entry.word, addr)
+            self.table.write_word(entry.slot, word)
         head.record_written(addr, key, size, delete)
-        return addr, size
+        return addr, size, word
 
     # --------------------------------------------------------------- repair path
     def handle_repair(self, key: int, observed_word: int) -> None:
@@ -114,6 +122,7 @@ class ErdaServer:
         c = Cleaner(self, head)
         self.cleaners[head.head_id] = c
         c.start()
+        self._notify_cleaning()
         return c
 
     def start_cleaning(self, head_id: int):
@@ -124,6 +133,7 @@ class ErdaServer:
         c = Cleaner(self, head)
         self.cleaners[head.head_id] = c
         c.start()
+        self._notify_cleaning()
         return c
 
     def cleaning_heads(self) -> Set[int]:
@@ -134,6 +144,35 @@ class ErdaServer:
 
     def cleaning_finished(self, head_id: int) -> None:
         self.cleaners.pop(head_id, None)
+        self._notify_cleaning()
+
+    # ------------------------------------------------- cleaning-epoch pub/sub
+    def subscribe_cleaning(self, token: object,
+                           cb: Callable[[int, FrozenSet[int]], None]
+                           ) -> Tuple[int, FrozenSet[int]]:
+        """Register for cleaning-epoch pushes (§4.4: the server notifies
+        clients when a head starts/finishes cleaning).  Returns the current
+        (epoch, cleaning-head set) so a freshly connected client starts with a
+        coherent view.  Re-subscribing with the same token replaces the old
+        callback — what ``reconnect()`` does."""
+        self._cleaning_subs[token] = cb
+        return self.cleaning_epoch, frozenset(self.cleaners)
+
+    def unsubscribe_cleaning(self, token: object) -> None:
+        self._cleaning_subs.pop(token, None)
+
+    def _notify_cleaning(self) -> None:
+        self.cleaning_epoch += 1
+        heads = frozenset(self.cleaners)
+        for cb in list(self._cleaning_subs.values()):
+            cb(self.cleaning_epoch, heads)
+
+    def abandon_cleaning(self) -> None:
+        """Drop all in-flight cleaners (recovery path) and push the epoch so
+        subscribed clients fall off the §4.4 send path."""
+        if self.cleaners:
+            self.cleaners.clear()
+            self._notify_cleaning()
 
     # --------------------------------------------------------------- recovery
     def recover(self) -> Dict[str, int]:

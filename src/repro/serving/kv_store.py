@@ -4,6 +4,10 @@ Decode-time KV pages / SSM state snapshots are Erda objects: appended with one
 one-sided write each, page-table entries are the 8-byte atomic words, and a
 preempted host's torn page is detected by CRC at fetch and falls back to the
 previous snapshot.  The log cleaner doubles as page eviction/compaction.
+Repeat fetches of a sequence's pages ride the client location cache: the
+snapshot that wrote a page warmed the cache with its hash-table word, so the
+decode-time re-fetch speculates (neighborhood + object on one doorbell) and
+validates by word compare — a failover drops the hints via ``reconnect()``.
 
 The store behind the page interface is pluggable: by default pages are sharded
 across an ``ErdaCluster`` (consistent-hash key routing spreads sequences over
@@ -95,3 +99,10 @@ class ErdaKVPageStore:
     def failover(self, shard: int):
         """Promote the shard's mirrored backup; pages keep serving."""
         return self.store.failover(shard)
+
+    @property
+    def stats(self):
+        """Backing-store op counters — includes the location cache's
+        ``spec_hits`` / ``spec_misses`` / ``spec_invalidations``, i.e. how
+        often page re-fetches collapsed to one doorbell."""
+        return self.store.stats

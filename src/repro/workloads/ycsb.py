@@ -132,9 +132,15 @@ def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
                 v = rng.bytes(value_size)
                 store.write(k, v)
                 model[k] = v
+    stats = dict(store.stats)
     return {"workload": workload, "n_ops": len(ops), "n_keys": n_keys,
             "reads": n_reads, "writes": n_writes, "batch_size": batch_size,
-            "store_stats": dict(store.stats)}
+            # location-cache effectiveness, surfaced top-level for reports
+            # (baseline stores have no speculation → zeros)
+            "spec_hits": stats.get("spec_hits", 0),
+            "spec_misses": stats.get("spec_misses", 0),
+            "spec_invalidations": stats.get("spec_invalidations", 0),
+            "store_stats": stats}
 
 
 # ----------------------------------------------------- kill-a-shard scenario
@@ -205,7 +211,11 @@ def run_failover_workload(store, workload: str, n_ops: int, n_keys: int,
             got = store.read(k)
         if got != v:
             raise RuntimeError(f"post-failover mismatch on key {k}")
+    stats = dict(store.stats)
     return {"workload": workload, "n_ops": len(ops), "reads": n_reads,
             "writes": n_writes, "killed_shard": killed_shard,
             "failovers": failovers, "denied_ops": denied,
-            "store_stats": dict(store.stats)}
+            "spec_hits": stats.get("spec_hits", 0),
+            "spec_misses": stats.get("spec_misses", 0),
+            "spec_invalidations": stats.get("spec_invalidations", 0),
+            "store_stats": stats}

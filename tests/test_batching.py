@@ -203,8 +203,17 @@ def test_erda_multi_ops_verb_parity_and_doorbells():
     assert s.transport.counts["write_with_imm"] == 8
     assert s.transport.counts["one_sided_write"] == 8
     s.multi_read([k for k, _ in items])
-    assert s.transport.doorbells == 4  # + neighborhood batch + object batch
+    # the multi_write warmed every key's location cache, so the batch folds
+    # all object reads into the neighborhood doorbell: +1 doorbell, not +2
+    assert s.transport.doorbells == 3
     assert s.transport.counts["one_sided_read"] == 16  # 2 per key, as always
+    assert s.stats["spec_hits"] == 8
+    # a cold-cache batch pays the seed's two doorbells (neighborhoods, fence,
+    # objects)
+    s.client.loc_cache.clear()
+    s.multi_read([k for k, _ in items])
+    assert s.transport.doorbells == 5
+    assert s.transport.counts["one_sided_read"] == 32
     # client's own stats agree with what its transport saw
     st, counts = s.stats, s.transport.counts
     assert st["one_sided_reads"] == counts["one_sided_read"]
