@@ -91,6 +91,30 @@ def main() -> None:
                   f"unrepl_b8={r['unrepl_b8']}us ratio_b1={r['ratio_b1']} "
                   f"ratio_b8={r['ratio_b8']}")
 
+    if want("serving_load"):
+        from benchmarks.figures import SERVING_LOADS, bench_serving_load
+        rows = bench_serving_load()
+        all_rows += rows
+        top = SERVING_LOADS[-1]
+        for r in rows:
+            if r.get("check") == "functional":
+                print(f"serving_load/functional,,"
+                      f"dispatches={r['dispatches']} "
+                      f"stale_or_lost={r['stale_or_lost']} "
+                      f"coalesced_equals_sequential="
+                      f"{r['coalesced_equals_sequential']}")
+                continue
+            mode = "coalesce" if r["coalesce"] else "per-op"
+            print(f"serving_load/{r['scheme']}/n{r['n_clients']}/{mode},"
+                  f"{r['p99_hi_us']},"
+                  f"sat={r['saturation_kops']}KOp/s knee={r['knee_kops']} "
+                  f"p50_lo={r['p50_lo_us']}us p99_lo={r['p99_lo_us']}us "
+                  f"p50_hi={r['p50_hi_us']}us p99_hi={r['p99_hi_us']}us "
+                  f"drop_hi={r['drop_rate_hi']} batch_hi={r['mean_batch_hi']} "
+                  f"qp_depth={r['qp_max_depth_hi']} "
+                  f"hol_ms={r['hol_wait_ms_hi']} "
+                  f"kops@{top}={r[f'kops@{top}']}")
+
     if want("read_speculation"):
         from benchmarks.figures import bench_read_speculation
         rows = bench_read_speculation()

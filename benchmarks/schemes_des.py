@@ -301,6 +301,85 @@ def overlapped_latency_us(per_shard_steps: list,
     return t_done[0] * 1e6
 
 
+# ---------------------------------------------------- doorbell-level captures
+# Step traces (above) collapse each op to ("delay"/"acquire") totals — enough
+# for closed-loop replay on a shared CPU, but blind to WHERE the time sits.
+# Doorbell traces keep the per-chain structure (per-WR NIC occupancy, CPU
+# service, persistence legs), which the contention layer
+# (repro.netsim.contention) arbitrates across QPs / the shared NIC link.
+
+
+def capture_op_doorbells(scheme: str, vsize: int,
+                         p: SimParams | None = None) -> Dict[str, list]:
+    """Doorbell-level traces of one single-key read and write, captured off
+    the real store code — the unit the contended replay arbitrates."""
+    p = p or SimParams()
+    key = ("op-db", scheme, vsize) + dataclasses.astuple(p)
+    hit = _trace_cache.get(key)
+    if hit is not None:
+        return hit
+    store = _make_capture_store(scheme, p)
+    value = b"\xa5" * vsize
+    store.write(_CAPTURE_KEY, value)
+    store.write(_CAPTURE_KEY, value)
+    _clear_loc_caches(store)
+    store.transport.take_steps()
+    store.transport.take_doorbells()
+    if store.read(_CAPTURE_KEY) != value:  # must run even under -O
+        raise RuntimeError("doorbell capture: read returned wrong value")
+    read_db = store.transport.take_doorbells()
+    store.write(_CAPTURE_KEY, value)
+    write_db = store.transport.take_doorbells()
+    store.transport.take_steps()
+    traces = {"read": read_db, "write": write_db}
+    _trace_cache[key] = traces
+    return traces
+
+
+def capture_batch_doorbells(scheme: str, vsize: int, batch: int,
+                            p: SimParams | None = None) -> Dict[str, list]:
+    """Doorbell-level traces of ONE ``multi_read``/``multi_write`` of
+    ``batch`` distinct keys — what the serving-at-load coalescer dispatches
+    when it merges ``batch`` admitted requests into one doorbell."""
+    p = p or SimParams()
+    key = ("batch-db", scheme, vsize, batch) + dataclasses.astuple(p)
+    hit = _trace_cache.get(key)
+    if hit is not None:
+        return hit
+    store = _make_capture_store(scheme, p)
+    keys = list(range(1, batch + 1))
+    items = [(k, bytes([k % 251]) * vsize) for k in keys]
+    store.multi_write(items)
+    store.multi_write(items)
+    _clear_loc_caches(store)
+    store.transport.take_steps()
+    store.transport.take_doorbells()
+    got = store.multi_read(keys)
+    if got != [v for _, v in items]:  # must run even under -O
+        raise RuntimeError(f"doorbell batch capture returned {got!r}")
+    read_db = store.transport.take_doorbells()
+    store.multi_write(items)
+    write_db = store.transport.take_doorbells()
+    store.transport.take_steps()
+    traces = {"read": read_db, "write": write_db}
+    _trace_cache[key] = traces
+    return traces
+
+
+def serving_trace_table(scheme: str, vsize: int,
+                        batches: Tuple[int, ...] = (1, 2, 4, 8, 16),
+                        p: SimParams | None = None) -> Dict[str, Dict[int, list]]:
+    """Single-server TraceTable for ``repro.serving.load``: every batch size's
+    read/write doorbell trace as one shard-0 lane.  (The sharded-cluster
+    table, with one lane per shard, is ``capture_page_fetch_traces``.)"""
+    table: Dict[str, Dict[int, list]] = {"read": {}, "write": {}}
+    for b in batches:
+        db = capture_batch_doorbells(scheme, vsize, b, p)
+        table["read"][b] = [(0, db["read"])]
+        table["write"][b] = [(0, db["write"])]
+    return table
+
+
 def make_sim(p: SimParams, n_shards: int = 1):
     """One Simulator + a server-CPU resource per shard (+ Verbs for ad-hoc
     processes, bound to shard 0)."""
@@ -312,9 +391,10 @@ def make_sim(p: SimParams, n_shards: int = 1):
     return sim, cpus, verbs
 
 
-__all__ = ["batched_latency_us", "capture_batch_traces",
-           "capture_cluster_batch_traces", "capture_op_traces",
+__all__ = ["batched_latency_us", "capture_batch_doorbells",
+           "capture_batch_traces", "capture_cluster_batch_traces",
+           "capture_op_doorbells", "capture_op_traces",
            "capture_replicated_write_traces", "capture_spec_read_traces",
            "make_sim", "op_cpu_us", "op_latency_us", "overlapped_latency_us",
            "replay_steps", "replicated_write_latency_us",
-           "spec_read_latency_us"]
+           "serving_trace_table", "spec_read_latency_us"]

@@ -7,6 +7,9 @@ from repro.fabric.transport import (MSG_BYTES, ONE_SIDED_VERBS, VERBS, Handle,
                                     WorkRequest, make_transport)
 from repro.fabric.sim import (SimTransport, replay_steps, steps_cpu_s,
                               steps_latency_s)
+from repro.netsim.contention import (OpHandle, ServerPort, contended_latency_us,
+                                     doorbell_trace_latency_us,
+                                     replay_doorbells)
 
 __all__ = [
     "MSG_BYTES",
@@ -22,4 +25,9 @@ __all__ = [
     "replay_steps",
     "steps_cpu_s",
     "steps_latency_s",
+    "OpHandle",
+    "ServerPort",
+    "contended_latency_us",
+    "doorbell_trace_latency_us",
+    "replay_doorbells",
 ]

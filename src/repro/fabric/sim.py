@@ -47,15 +47,25 @@ two-sided read service ≈ 55-60 µs → baseline read ≈ 92 µs).
 real store code once, then replays the trace through the event loop for every
 closed-loop iteration (``replay_steps``).  The steps are resource-agnostic so
 a sharded cluster can replay the same trace against *its* shard's CPU.
+
+Pricing itself lives in ``repro.netsim.pricing`` — ONE shared table: this
+backend only classifies each executed WR into a ``WrCost`` (wire transfer,
+server-CPU service, NVM persist leg) and lets ``pricing.chain_steps`` emit
+the calibrated legs.  Alongside the flat steps it records a **doorbell-level
+trace** (``take_doorbells``): the chain structure, per-WR costs, client
+compute and background server work, in order — the input the contention-aware
+replay (``repro.netsim.contention``) arbitrates over per-QP send queues and
+the shared per-NIC link, with completion split from persistence.  Both views
+are derived from the same ``WrCost`` objects, so they cannot drift.
 """
 from __future__ import annotations
 
 from typing import Generator, List, Optional, Tuple
 
-from repro.fabric.transport import (MSG_BYTES, ONE_SIDED_VERBS, Handle,
-                                    InProcessTransport)
+from repro.fabric.transport import MSG_BYTES, Handle, InProcessTransport
+from repro.netsim.pricing import (ClientCompute, DoorbellEvent, DoorbellTrace,
+                                  ServerAsync, SimParams, WrCost, chain_steps)
 from repro.netsim.sim import Resource
-from repro.netsim.verbs import SimParams
 from repro.nvmsim.device import NVMDevice
 
 Step = Tuple[str, float]  # ("delay"|"cpu"|"cpu_async", seconds)
@@ -67,10 +77,17 @@ class SimTransport(InProcessTransport):
         super().__init__(dev, trace=trace)
         self.p = params or SimParams()
         self.steps: List[Step] = []
+        self.doorbell_trace: List[DoorbellEvent] = []
 
     def take_steps(self) -> List[Step]:
         s, self.steps = self.steps, []
         return s
+
+    def take_doorbells(self) -> List[DoorbellEvent]:
+        """Drain the doorbell-level trace (chains + client/background work) —
+        the contention-aware replay's input."""
+        d, self.doorbell_trace = self.doorbell_trace, []
+        return d
 
     # ------------------------------------------------------- CPU service table
     def _service(self, op: str, req_bytes: int, resp_bytes: int) -> float:
@@ -98,54 +115,51 @@ class SimTransport(InProcessTransport):
         return p.t_cpu_hash_s             # metadata-only ops (e.g. deletes)
 
     # ------------------------------------------------------ per-doorbell price
+    def _wr_cost(self, h: Handle) -> WrCost:
+        """Classify one executed WR into the shared chain-cost vocabulary —
+        the single place a WR's wire/CPU/persist footprint is decided."""
+        wr = h.wr
+        p = self.p
+        if wr.verb == "one_sided_read":
+            return WrCost(True, p.xfer_s(wr.nbytes))
+        if wr.verb == "atomic_word_write":
+            return WrCost(True, p.xfer_s(8))
+        if wr.verb == "one_sided_write":
+            # ACK ≠ persistent; the persistence leg is priced separately so
+            # the contended replay can split completion from durability (the
+            # legacy closed-form steps charge it on the client path).  Callers
+            # that force persistence elsewhere — RAW's read-after-write — pass
+            # persist=False so it is not double-counted.
+            n = len(wr.data)
+            return WrCost(True, p.xfer_s(n),
+                          persist_s=self.dev.write_latency_s(n) if wr.persist
+                          else 0.0)
+        # two-sided: each RPC is individually polled + serviced by the server
+        resp = wr.resp_bytes
+        if resp is None:  # measure the response payload when not forced
+            resp = (len(h.result) if isinstance(h.result, (bytes, bytearray))
+                    else MSG_BYTES)
+        return WrCost(False, p.xfer_s(wr.req_bytes),
+                      resp_xfer_s=p.xfer_s(resp),
+                      cpu_s=p.t_cpu_poll_s
+                      + self._service(wr.op, wr.req_bytes, resp))
+
     def _charge_doorbell(self, handles: List[Handle], qp: int) -> None:
         """One doorbell ring for a posted chain: base RTT / half-RTT legs are
-        charged ONCE per chain, marginal transfer / NVM / CPU per WR."""
-        p = self.p
-        one_sided = [h for h in handles if h.wr.verb in ONE_SIDED_VERBS]
-        two_sided = [h for h in handles if h.wr.verb not in ONE_SIDED_VERBS]
-        if one_sided:
-            # one doorbell + NIC WQE fetch + wire round trip for the chain
-            self.steps.append(("delay", p.t_one_sided_s))
-            for h in one_sided:
-                wr = h.wr
-                if wr.verb == "one_sided_read":
-                    self.steps.append(("delay", p.xfer_s(wr.nbytes)))
-                elif wr.verb == "atomic_word_write":
-                    self.steps.append(("delay", p.xfer_s(8)))
-                else:  # one_sided_write: wire leg, then NVM persist
-                    # ACK ≠ persistent; the paper's latency model charges the
-                    # media write on the client's path.  Callers that force
-                    # persistence separately — RAW's read-after-write — pass
-                    # persist=False so it is not double-counted.
-                    n = len(wr.data)
-                    self.steps.append(("delay", p.xfer_s(n)))
-                    if wr.persist:
-                        self.steps.append(("delay", self.dev.write_latency_s(n)))
-        if two_sided:
-            # requests of the chain share one send doorbell / half RTT; each
-            # RPC is individually polled + serviced by the server CPU; the
-            # responses share the return half RTT
-            self.steps.append(("delay", p.t_half_rtt_s))
-            for h in two_sided:
-                wr = h.wr
-                resp = wr.resp_bytes
-                if resp is None:  # measure the response payload when not forced
-                    resp = (len(h.result)
-                            if isinstance(h.result, (bytes, bytearray))
-                            else MSG_BYTES)
-                self.steps.append(("delay", p.xfer_s(wr.req_bytes)))
-                self.steps.append(("cpu", p.t_cpu_poll_s
-                                   + self._service(wr.op, wr.req_bytes, resp)))
-                self.steps.append(("delay", p.xfer_s(resp)))
-            self.steps.append(("delay", p.t_half_rtt_s))
+        charged ONCE per chain, marginal transfer / NVM / CPU per WR — all
+        through the shared pricing table."""
+        wrs = [self._wr_cost(h) for h in handles]
+        self.steps.extend(chain_steps(self.p, wrs))
+        self.doorbell_trace.append(DoorbellTrace(qp, tuple(wrs)))
 
     # ------------------------------------------------------------ timing hooks
     def client_crc(self, nbytes: int) -> None:
         self.steps.append(("delay", self.p.crc_s(nbytes)))
+        self.doorbell_trace.append(ClientCompute(self.p.crc_s(nbytes)))
 
     def server_async(self, op: str, nbytes: int) -> None:
         self.steps.append(("cpu_async", self._service(op, nbytes, 0)))
+        self.doorbell_trace.append(ServerAsync(self._service(op, nbytes, 0)))
 
 
 # --------------------------------------------------------------------- replay

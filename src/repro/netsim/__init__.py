@@ -1,4 +1,9 @@
-from repro.netsim.sim import Simulator, Resource, run_process
-from repro.netsim.verbs import SimParams, Verbs
+from repro.netsim.sim import FifoLock, Resource, Simulator, run_process
+from repro.netsim.pricing import (ClientCompute, DoorbellTrace, ServerAsync,
+                                  SimParams, WrCost, chain_nic_occupancy_s,
+                                  chain_steps)
+from repro.netsim.verbs import Verbs
 
-__all__ = ["Simulator", "Resource", "run_process", "SimParams", "Verbs"]
+__all__ = ["Simulator", "Resource", "FifoLock", "run_process", "SimParams",
+           "Verbs", "WrCost", "DoorbellTrace", "ClientCompute", "ServerAsync",
+           "chain_steps", "chain_nic_occupancy_s"]

@@ -6,48 +6,20 @@ verbs (send/recv) are serviced by the server CPU resource, so they queue when
 the CPU saturates; that queueing is what flattens the baselines' throughput
 curves in Figs 18-21 of the paper.
 
-Constants are calibrated so that the *paper's measured averages* are
-reproduced to first order (see EXPERIMENTS.md §Paper-validation):
-  - one-sided RTT ≈ 30 µs  → Erda read (2 one-sided reads) ≈ 62 µs  (paper: 62.84)
-  - two-sided read service ≈ 55 µs → baseline read ≈ 92 µs          (paper: 92.7)
-These are 2010-era Xeon E5620 + ConnectX-3 numbers, not modern hardware.
+All pricing comes from the shared table in ``repro.netsim.pricing``
+(``SimParams`` + ``chain_steps``) — the same table ``fabric.sim`` prices
+doorbells from — so the calibration (one-sided RTT ≈ 30 µs → Erda read
+≈ 62 µs; two-sided read service ≈ 55-60 µs → baseline read ≈ 92 µs) has one
+source of truth.  ``SimParams`` is re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Generator, Optional
+from typing import Generator
 
+from repro.netsim.pricing import SimParams, WrCost, chain_steps
 from repro.netsim.sim import Resource, Simulator
 
-
-@dataclasses.dataclass
-class SimParams:
-    # network
-    t_one_sided_s: float = 30.0e-6        # base RTT for a one-sided verb
-    t_half_rtt_s: float = 15.0e-6         # one-way network latency (two-sided legs)
-    net_bandwidth_Bps: float = 5.0e9      # 40 Gbps
-    # server CPU service components (seconds)
-    t_cpu_poll_s: float = 2.0e-6          # receive + dispatch a two-sided message
-    t_cpu_hash_s: float = 2.0e-6          # hash-table lookup
-    t_cpu_read_base_s: float = 60.0e-6    # baseline read servicing (lookup+copy+post)
-    t_cpu_erda_alloc_s: float = 38.0e-6   # Erda write_with_imm: alloc + 8B atomic meta
-    t_cpu_redo_append_s: float = 40.0e-6  # redo: receive record, CRC verify, append
-    t_cpu_apply_s: float = 10.0e-6        # async apply from log/ring to destination
-    t_cpu_raw_alloc_s: float = 20.0e-6    # RAW: ring slot allocation + response
-    # client CPU
-    crc_bandwidth_Bps: float = 2.0e9      # client-side CRC verification
-    memcpy_bandwidth_Bps: float = 4.0e9
-    # server parallelism (2 × 4-core Xeon E5620)
-    server_cores: int = 8
-
-    def xfer_s(self, nbytes: int) -> float:
-        return nbytes / self.net_bandwidth_Bps
-
-    def crc_s(self, nbytes: int) -> float:
-        return nbytes / self.crc_bandwidth_Bps
-
-    def memcpy_s(self, nbytes: int) -> float:
-        return nbytes / self.memcpy_bandwidth_Bps
+__all__ = ["SimParams", "Verbs"]
 
 
 class Verbs:
@@ -59,19 +31,26 @@ class Verbs:
         self.cpu = server_cpu
         self.nvm = nvm
 
+    def _replay(self, wrs) -> Generator:
+        for kind, s in chain_steps(self.p, wrs):
+            if kind == "cpu":
+                yield ("acquire", self.cpu, s)
+            else:
+                yield ("delay", s)
+
     # ---------------------------------------------------------- one-sided
     def one_sided_read(self, nbytes: int) -> Generator:
-        yield ("delay", self.p.t_one_sided_s + self.p.xfer_s(nbytes))
+        yield from self._replay([WrCost(True, self.p.xfer_s(nbytes))])
 
     def one_sided_write(self, nbytes: int) -> Generator:
         # ACK means "reached NIC cache", NOT persistent — the RDA gap (§1).
-        yield ("delay", self.p.t_one_sided_s + self.p.xfer_s(nbytes))
+        yield from self._replay([WrCost(True, self.p.xfer_s(nbytes))])
 
     # ---------------------------------------------------------- two-sided
     def send_recv(self, service_s: float, req_bytes: int = 64, resp_bytes: int = 64) -> Generator:
-        yield ("delay", self.p.t_half_rtt_s + self.p.xfer_s(req_bytes))
-        yield ("acquire", self.cpu, self.p.t_cpu_poll_s + service_s)
-        yield ("delay", self.p.t_half_rtt_s + self.p.xfer_s(resp_bytes))
+        yield from self._replay([WrCost(False, self.p.xfer_s(req_bytes),
+                                        resp_xfer_s=self.p.xfer_s(resp_bytes),
+                                        cpu_s=self.p.t_cpu_poll_s + service_s)])
 
     def cpu_async(self, service_s: float) -> None:
         """Background server work (e.g. applying a redo entry) — consumes CPU

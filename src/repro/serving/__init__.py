@@ -1,4 +1,32 @@
-from repro.serving.kv_store import ErdaKVPageStore
-from repro.serving.engine import ServeEngine
+"""Serving layer: the Erda-backed KV page store + batched decode engine
+(jax-side), and the open-loop serving-at-load driver (DES-side).
 
-__all__ = ["ErdaKVPageStore", "ServeEngine"]
+The jax-backed classes are imported lazily so that the DES serving machinery
+(`repro.serving.load`, `serve_kv_at_load`) — and the tier-1 tests that
+exercise it — never pay the jax import unless an engine is actually built.
+"""
+_LAZY = {
+    "ErdaKVPageStore": ("repro.serving.kv_store", "ErdaKVPageStore"),
+    "ServeEngine": ("repro.serving.engine", "ServeEngine"),
+    "serve_kv_at_load": ("repro.serving.engine", "serve_kv_at_load"),
+    "OpenLoopConfig": ("repro.serving.load", "OpenLoopConfig"),
+    "run_open_loop": ("repro.serving.load", "run_open_loop"),
+    "sweep_open_loop": ("repro.serving.load", "sweep_open_loop"),
+    "validate_schedule": ("repro.serving.load", "validate_schedule"),
+    "capture_page_fetch_traces": ("repro.serving.load",
+                                  "capture_page_fetch_traces"),
+    "event_trace_bytes": ("repro.serving.load", "event_trace_bytes"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value
+    return value

@@ -1,20 +1,25 @@
 """Batched serving engine: prefill a batch of requests, decode greedily, and
 checkpoint decode state into the Erda page store so a preempted replica
-resumes bit-identically (the serving-side use of the paper's protocol)."""
+resumes bit-identically (the serving-side use of the paper's protocol).
+
+Also the front door for serving the page store AT LOAD: ``serve_kv_at_load``
+drives KV page fetches through the open-loop Poisson driver
+(``repro.serving.load``) over the contention-aware DES — offered load in,
+throughput + tail latency out.  jax is imported lazily (only when a
+``ServeEngine`` is built), so the at-load path stays jax-free.
+"""
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-
-from repro.serving.kv_store import ErdaKVPageStore
 
 
 class ServeEngine:
-    def __init__(self, model, params, *, page_store: Optional[ErdaKVPageStore] = None,
+    def __init__(self, model, params, *, page_store=None,
                  snapshot_every: int = 0):
+        import jax
+        from repro.serving.kv_store import ErdaKVPageStore
         self.model = model
         self.params = params
         self.pages = page_store or ErdaKVPageStore()
@@ -26,6 +31,7 @@ class ServeEngine:
                  crash_at: Optional[int] = None) -> np.ndarray:
         """Greedy decode; optionally 'crash' after `crash_at` tokens (state is
         then restored from the Erda page store and decoding continues)."""
+        import jax.numpy as jnp
         logits, cache = self._prefill(self.params, batch)
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = [np.asarray(token)]
@@ -53,3 +59,39 @@ class ServeEngine:
         if restored is None:
             raise RuntimeError("no snapshot to recover from")
         return restored
+
+
+# --------------------------------------------------------- serving at load
+#: captured page-fetch trace tables, keyed by geometry (capture is ~100 ms;
+#: a load sweep calls serve_kv_at_load once per point)
+_page_traces: Dict[Tuple, dict] = {}
+
+
+def serve_kv_at_load(offered_kops: float, *, n_clients: int = 4,
+                     n_shards: int = 2, vsize: int = 1024,
+                     read_frac: float = 0.9, coalesce: bool = True,
+                     horizon_s: float = 0.02, seed: int = 0,
+                     p=None, **cfg_kwargs) -> dict:
+    """Serve Erda-backed KV page fetches at a fixed OFFERED load (KOp/s).
+
+    Captures doorbell traces of real ``ErdaCluster`` ``multi_read`` /
+    ``multi_write`` page ops (once per geometry), then replays Poisson
+    arrivals through the contended fabric with bounded admission queues and
+    (optionally) adaptive doorbell coalescing.  Returns the
+    ``run_open_loop`` report: throughput, p50/p95/p99 per op type, drops,
+    per-QP HoL stats, port utilization, persistence lag.
+    """
+    import dataclasses
+    from repro.netsim.pricing import SimParams
+    from repro.serving.load import (OpenLoopConfig, capture_page_fetch_traces,
+                                    run_open_loop)
+    p = p or SimParams()
+    key = (n_shards, vsize) + dataclasses.astuple(p)
+    traces = _page_traces.get(key)
+    if traces is None:
+        traces = _page_traces[key] = capture_page_fetch_traces(
+            n_shards=n_shards, vsize=vsize, p=p)
+    cfg = OpenLoopConfig(offered_kops=offered_kops, n_clients=n_clients,
+                         horizon_s=horizon_s, coalesce=coalesce,
+                         read_frac=read_frac, seed=seed, **cfg_kwargs)
+    return run_open_loop(traces, cfg, p)

@@ -1,3 +1,5 @@
+from repro.workloads.metrics import LatencyRecorder, latency_summary_us, percentile
 from repro.workloads.ycsb import WORKLOADS, Workload, ZipfianGenerator, make_ops
 
-__all__ = ["WORKLOADS", "Workload", "ZipfianGenerator", "make_ops"]
+__all__ = ["WORKLOADS", "Workload", "ZipfianGenerator", "make_ops",
+           "LatencyRecorder", "latency_summary_us", "percentile"]
