@@ -248,16 +248,23 @@ def bench_replication(vsizes=(128, 1024)) -> List[Dict]:
     concurrent DES processes) vs the unreplicated batched write, batch sizes
     1-8.  Expected: the mirror legs ride the backup's own QP and overlap, so
     the replicated write stays within ~1.5x of unreplicated at every batch
-    size instead of paying a serialized second round trip."""
-    from benchmarks.schemes_des import replicated_write_latency_us
+    size instead of paying a serialized second round trip.
+
+    The ``durable_b*`` columns price the mirrored batch's DURABILITY point
+    as the quorum-th (with r=2/W=2: the LATER) replica's NVM persist leg —
+    completion ≠ persistence, so durable >= acked always."""
+    from benchmarks.schemes_des import (mirrored_write_times_us,
+                                        replicated_write_latency_us)
     rows = []
     for vsize in vsizes:
         per_b = {}
         for b in REPLICATION_BATCHES:
             unrepl = batched_latency_us("erda", "write", vsize, b)
             repl = replicated_write_latency_us(vsize, b)
+            times = mirrored_write_times_us(vsize, b, replication=2)
             per_b[b] = {"unrepl_us": unrepl, "repl_us": repl,
-                        "ratio": repl / unrepl}
+                        "ratio": repl / unrepl,
+                        "durable_us": times["durable_us"] / b}
         rows.append({
             "figure": "replication", "scheme": "erda-cluster(r2)",
             "op": "write", "value_size": vsize,
@@ -267,7 +274,77 @@ def bench_replication(vsizes=(128, 1024)) -> List[Dict]:
                for b in REPLICATION_BATCHES},
             **{f"ratio_b{b}": round(per_b[b]["ratio"], 3)
                for b in REPLICATION_BATCHES},
+            **{f"durable_b{b}": round(per_b[b]["durable_us"], 2)
+               for b in REPLICATION_BATCHES},
         })
+    return rows
+
+
+def bench_quorum(vsizes=(128, 1024), seed=0) -> List[Dict]:
+    """Quorum replication (r=3, W=2) cost and resilience figure.
+
+    Write rows: per-op acked latency (quorum-th lane completion) of a
+    mirrored batched write at r=3 vs r=2 vs unreplicated, plus the quorum
+    durability point (quorum-th lane's NVM persist).  All mirror lanes ride
+    their own QPs and overlap, so r=3 acked stays within ~1.5x of the
+    unreplicated write at every batch size.
+
+    Read row: the DEGRADED quorum read a primary-down group serves over its
+    R=2 live backups (overlapped) vs the healthy one-sided read.
+
+    Functional row: a seeded chaos YCSB run (kills / heals / mid-write
+    partitions) on an r=3 cluster — ``lost_acked_writes`` and
+    ``stale_reads`` must both be 0 and stale-epoch writes must bounce at
+    the fenced transports.  CI asserts off these artifacts."""
+    from benchmarks.schemes_des import (degraded_read_latency_us,
+                                        mirrored_write_times_us,
+                                        replicated_write_latency_us)
+    rows = []
+    for vsize in vsizes:
+        row = {"figure": "quorum", "scheme": "erda-cluster(r3)",
+               "op": "write", "value_size": vsize}
+        for b in REPLICATION_BATCHES:
+            unrepl = batched_latency_us("erda", "write", vsize, b)
+            r2 = mirrored_write_times_us(vsize, b, replication=2)
+            r3 = mirrored_write_times_us(vsize, b, replication=3)
+            repl3 = replicated_write_latency_us(vsize, b, replication=3)
+            row[f"unrepl_b{b}"] = round(unrepl, 2)
+            row[f"r2_acked_b{b}"] = round(r2["acked_us"] / b, 2)
+            row[f"r3_acked_b{b}"] = round(r3["acked_us"] / b, 2)
+            row[f"r3_durable_b{b}"] = round(r3["durable_us"] / b, 2)
+            row[f"r3_all_b{b}"] = round(r3["all_lanes_us"] / b, 2)
+            row[f"r3_steps_b{b}"] = round(repl3, 2)
+            row[f"r3_ratio_b{b}"] = round(r3["acked_us"] / b / unrepl, 3)
+        rows.append(row)
+    for vsize in vsizes:
+        healthy = op_latency_us("erda", "read", vsize)
+        degraded = degraded_read_latency_us(vsize, replication=3)
+        rows.append({"figure": "quorum", "scheme": "erda-cluster(r3)",
+                     "op": "degraded_read", "value_size": vsize,
+                     "healthy_us": round(healthy, 2),
+                     "degraded_us": round(degraded, 2),
+                     "ratio": round(degraded / healthy, 3)})
+    # functional chaos row — the zero-loss/zero-staleness acceptance evidence
+    # (small geometry: the §4.2 recovery sweeps a heal/promotion pays scan
+    # the whole device, and a chaos run performs dozens of them)
+    from repro.core import ServerConfig, make_store
+    from repro.workloads import run_chaos_workload
+    cfg = ServerConfig(device_size=8 << 20, table_capacity=1 << 10,
+                       n_heads=2, region_size=1 << 20, segment_size=32 << 10)
+    store = make_store("erda-cluster", n_shards=2, cfg=cfg, replication=3)
+    rep = run_chaos_workload(store, workload="ycsb_a", n_ops=300, n_keys=40,
+                             seed=seed, n_faults=6)
+    rows.append({"figure": "quorum", "scheme": "erda-cluster(r3)",
+                 "op": "chaos_ycsb_a", "value_size": 64,
+                 "seed": seed, "faults": rep["faults"],
+                 "kills": rep["kills"], "partitions": rep["partitions"],
+                 "failovers": rep["failovers"],
+                 "epoch_bumps": rep["epoch_bumps"],
+                 "degraded_reads": rep["degraded_reads"],
+                 "stale_rejected": rep["stale_rejected"],
+                 "splitbrain_rejections": rep["splitbrain_rejections"],
+                 "lost_acked_writes": rep["lost_acked_writes"],
+                 "stale_reads": rep["stale_reads"]})
     return rows
 
 

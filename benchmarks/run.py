@@ -91,6 +91,31 @@ def main() -> None:
                   f"unrepl_b8={r['unrepl_b8']}us ratio_b1={r['ratio_b1']} "
                   f"ratio_b8={r['ratio_b8']}")
 
+    if want("quorum"):
+        from benchmarks.figures import bench_quorum
+        rows = bench_quorum()
+        all_rows += rows
+        for r in rows:
+            if r["op"] == "write":
+                print(f"quorum/v{r['value_size']}/write,{r['r3_acked_b8']},"
+                      f"unrepl_b8={r['unrepl_b8']}us "
+                      f"r2_b8={r['r2_acked_b8']}us "
+                      f"r3_durable_b8={r['r3_durable_b8']}us "
+                      f"ratio_b1={r['r3_ratio_b1']} "
+                      f"ratio_b8={r['r3_ratio_b8']}")
+            elif r["op"] == "degraded_read":
+                print(f"quorum/v{r['value_size']}/degraded_read,"
+                      f"{r['degraded_us']},healthy={r['healthy_us']}us "
+                      f"ratio={r['ratio']}")
+            else:
+                print(f"quorum/chaos/{r['op']},,"
+                      f"faults={r['faults']} failovers={r['failovers']} "
+                      f"epoch_bumps={r['epoch_bumps']} "
+                      f"degraded_reads={r['degraded_reads']} "
+                      f"stale_rejected={r['stale_rejected']} "
+                      f"lost_acked_writes={r['lost_acked_writes']} "
+                      f"stale_reads={r['stale_reads']}")
+
     if want("serving_load"):
         from benchmarks.figures import SERVING_LOADS, bench_serving_load
         rows = bench_serving_load()

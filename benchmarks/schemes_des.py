@@ -60,8 +60,9 @@ def _clear_loc_caches(store) -> None:
         return
     cluster = getattr(store, "cluster", None)
     if cluster is not None:
-        for c in cluster.clients:
-            c.loc_cache.clear()
+        for g in cluster.groups:
+            for c in g.replicas:
+                c.loc_cache.clear()
 
 
 def capture_op_traces(scheme: str, vsize: int, p: SimParams | None = None,
@@ -241,28 +242,33 @@ def capture_cluster_batch_traces(vsize: int, batch: int, n_shards: int = 4,
     return traces
 
 
+def _make_replicated_store(p: SimParams, replication: int):
+    factory = lambda dev: SimTransport(dev, p)
+    return make_store("erda-cluster", n_shards=1, cfg=_CAPTURE_CFG,
+                      transport_factory=factory, replication=replication)
+
+
 def capture_replicated_write_traces(vsize: int, batch: int,
-                                    p: SimParams | None = None) -> Dict[str, list]:
+                                    p: SimParams | None = None,
+                                    replication: int = 2) -> Dict[str, list]:
     """Per-lane DES step traces of ONE mirrored ``multi_write`` of ``batch``
-    keys on a ``replication=2`` shard group: ``{"write": [primary_steps,
-    backup_steps]}``.  The two lanes are separate QPs/transports, so the
-    traces replay as CONCURRENT processes (``overlapped_latency_us``) — the
-    mirror costs a second doorbell chain on its own lane, not a serialized
-    second round trip."""
+    keys on a ``replication=r`` shard group: ``{"write": [primary_steps,
+    backup0_steps, ...]}``.  The r lanes are separate QPs/transports, so the
+    traces replay as CONCURRENT processes (``overlapped_latency_us``) — each
+    mirror costs another doorbell chain on its own lane, not a serialized
+    extra round trip."""
     p = p or SimParams()
-    key = ("replicated", vsize, batch) + dataclasses.astuple(p)
+    key = ("replicated", vsize, batch, replication) + dataclasses.astuple(p)
     hit = _trace_cache.get(key)
     if hit is not None:
         return hit
-    factory = lambda dev: SimTransport(dev, p)
-    store = make_store("erda-cluster", n_shards=1, cfg=_CAPTURE_CFG,
-                       transport_factory=factory, replication=2)
+    store = _make_replicated_store(p, replication)
     keys = list(range(1, batch + 1))
     items = [(k, bytes([k % 251]) * vsize) for k in keys]
     store.multi_write(items)  # warm: create objects, settle size caches
     store.multi_write(items)
     group = store.cluster.groups[0]
-    transports = [group.primary.transport, group.backup.transport]
+    transports = [c.transport for c in group.replicas]
     for t in transports:
         t.take_steps()
     store.multi_write(items)  # the measured mirrored batch
@@ -272,11 +278,121 @@ def capture_replicated_write_traces(vsize: int, batch: int,
 
 
 def replicated_write_latency_us(vsize: int, batch: int,
-                                p: SimParams | None = None) -> float:
-    """Amortized per-op latency of a mirrored batched write: both lanes'
-    traces replayed concurrently, done when the slower lane drains."""
-    traces = capture_replicated_write_traces(vsize, batch, p)
+                                p: SimParams | None = None,
+                                replication: int = 2) -> float:
+    """Amortized per-op latency of a mirrored batched write: all lanes'
+    traces replayed concurrently, done when the slowest lane drains."""
+    traces = capture_replicated_write_traces(vsize, batch, p, replication)
     return overlapped_latency_us(traces["write"], p) / batch
+
+
+def capture_replicated_write_doorbells(vsize: int, batch: int,
+                                       p: SimParams | None = None,
+                                       replication: int = 2) -> List[list]:
+    """Per-lane DOORBELL traces of one mirrored ``multi_write`` — the input
+    ``mirrored_write_times_us`` replays to separate the quorum ack point from
+    the quorum durability point (completion ≠ persistence)."""
+    p = p or SimParams()
+    key = ("replicated-db", vsize, batch, replication) + dataclasses.astuple(p)
+    hit = _trace_cache.get(key)
+    if hit is not None:
+        return hit
+    store = _make_replicated_store(p, replication)
+    keys = list(range(1, batch + 1))
+    items = [(k, bytes([k % 251]) * vsize) for k in keys]
+    store.multi_write(items)
+    store.multi_write(items)
+    transports = [c.transport for c in store.cluster.groups[0].replicas]
+    for t in transports:
+        t.take_steps()
+        t.take_doorbells()
+    store.multi_write(items)  # the measured mirrored batch
+    traces = [t.take_doorbells() for t in transports]
+    for t in transports:
+        t.take_steps()
+    _trace_cache[key] = traces
+    return traces
+
+
+def mirrored_write_times_us(vsize: int, batch: int,
+                            p: SimParams | None = None,
+                            replication: int = 2,
+                            quorum: int | None = None) -> Dict[str, object]:
+    """Quorum timing of one mirrored batched write, replayed at the doorbell
+    level: each replica lane runs as its own DES process against its own
+    ``ServerPort``; the write ACKS when the W-th lane completes and is
+    DURABLE when the W-th lane's NVM persist leg lands (order statistics via
+    ``quorum_times_s`` — with r=2/W=2 that is the LATER replica on both
+    axes).  Returns µs: ``acked_us``, ``durable_us``, ``all_lanes_us``, plus
+    ``per_lane`` [(completed_us, durable_us), ...]."""
+    from repro.netsim.contention import OpHandle, ServerPort, replay_doorbells
+    from repro.netsim.pricing import quorum_times_s
+    from repro.netsim.sim import FifoLock, run_process
+
+    p = p or SimParams()
+    traces = capture_replicated_write_doorbells(vsize, batch, p, replication)
+    if quorum is None:
+        quorum = replication // 2 + 1
+    sim = Simulator()
+    handles = []
+    for i, trace in enumerate(traces):
+        port = ServerPort(sim, p, name=f"replica{i}")
+        qp = FifoLock(sim, f"qp[{i}]")
+        op = OpHandle()
+        handles.append(op)
+        run_process(sim, replay_doorbells(trace, qp, port, op),
+                    lambda op=op: op.complete(sim.now))
+    sim.run()
+    lane_times = [(h.completed_at, h.durable_at) for h in handles]
+    acked_s, durable_s = quorum_times_s(lane_times, quorum)
+    return {"acked_us": acked_s * 1e6,
+            "durable_us": durable_s * 1e6,
+            "all_lanes_us": max(t for pair in lane_times for t in pair) * 1e6,
+            "per_lane": [(c * 1e6, d * 1e6) for c, d in lane_times]}
+
+
+def capture_degraded_read_traces(vsize: int, p: SimParams | None = None,
+                                 replication: int = 3) -> Dict[str, list]:
+    """DES step traces of a single-key read on a healthy r-replica group vs
+    the DEGRADED quorum read the same group serves with its primary down:
+    ``{"healthy": steps, "degraded": [lane_steps, ...]}`` — one lane per
+    backup consulted (R = r - W + 1), replayed concurrently."""
+    p = p or SimParams()
+    key = ("degraded-read", vsize, replication) + dataclasses.astuple(p)
+    hit = _trace_cache.get(key)
+    if hit is not None:
+        return hit
+    store = _make_replicated_store(p, replication)
+    value = b"\xa5" * vsize
+    store.write(_CAPTURE_KEY, value)
+    store.write(_CAPTURE_KEY, value)
+    _clear_loc_caches(store)
+    group = store.cluster.groups[0]
+    group.primary.transport.take_steps()
+    if store.read(_CAPTURE_KEY) != value:  # must run even under -O
+        raise RuntimeError("degraded capture: healthy read wrong value")
+    healthy = group.primary.transport.take_steps()
+    store.fail_shard(0)  # crash (NVM intact): group serves degraded reads
+    _clear_loc_caches(store)
+    backups = [c.transport for c in group.backups]
+    for t in backups:
+        t.take_steps()
+    degraded_before = group.degraded_reads
+    if store.read(_CAPTURE_KEY) != value:
+        raise RuntimeError("degraded capture: quorum read wrong value")
+    if group.degraded_reads != degraded_before + 1:
+        raise RuntimeError("degraded capture: read did not take quorum path")
+    lanes = [steps for steps in (t.take_steps() for t in backups) if steps]
+    traces = {"healthy": healthy, "degraded": lanes}
+    _trace_cache[key] = traces
+    return traces
+
+
+def degraded_read_latency_us(vsize: int, p: SimParams | None = None,
+                             replication: int = 3) -> float:
+    """Latency of the degraded quorum read (R backup lanes overlapped)."""
+    traces = capture_degraded_read_traces(vsize, p, replication)
+    return overlapped_latency_us(traces["degraded"], p)
 
 
 def overlapped_latency_us(per_shard_steps: list,
@@ -393,8 +509,10 @@ def make_sim(p: SimParams, n_shards: int = 1):
 
 __all__ = ["batched_latency_us", "capture_batch_doorbells",
            "capture_batch_traces", "capture_cluster_batch_traces",
-           "capture_op_doorbells", "capture_op_traces",
+           "capture_degraded_read_traces", "capture_op_doorbells",
+           "capture_op_traces", "capture_replicated_write_doorbells",
            "capture_replicated_write_traces", "capture_spec_read_traces",
-           "make_sim", "op_cpu_us", "op_latency_us", "overlapped_latency_us",
+           "degraded_read_latency_us", "make_sim", "mirrored_write_times_us",
+           "op_cpu_us", "op_latency_us", "overlapped_latency_us",
            "replay_steps", "replicated_write_latency_us",
            "serving_trace_table", "spec_read_latency_us"]

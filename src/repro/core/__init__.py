@@ -8,8 +8,9 @@ from repro.core.api import (ALL_SCHEMES, ALL_STORES, ErdaClusterStore,
                             ErdaStore, make_store)
 from repro.core.client import ErdaClient
 from repro.core.cluster import ErdaCluster, HashRing
-from repro.core.replication import ShardDownError, ShardGroup
+from repro.core.replication import InFlightWrite, ShardDownError, ShardGroup
 from repro.core.server import DataLossError, ErdaServer, ServerConfig
+from repro.fabric.transport import StaleEpochError
 
 __all__ = [
     "ALL_SCHEMES",
@@ -21,8 +22,10 @@ __all__ = [
     "ErdaServer",
     "ErdaStore",
     "HashRing",
+    "InFlightWrite",
     "ServerConfig",
     "ShardDownError",
     "ShardGroup",
+    "StaleEpochError",
     "make_store",
 ]

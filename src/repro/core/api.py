@@ -109,13 +109,19 @@ class ErdaClusterStore:
     def recover_shard(self, shard: int):
         return self.cluster.recover_shard(shard)
 
-    def fail_shard(self, shard: int) -> None:
-        """Simulate losing the shard's primary replica (NVM loss)."""
-        self.cluster.fail_shard(shard)
+    def fail_shard(self, shard: int, replica: int = 0, *,
+                   wipe: bool = False) -> None:
+        """Simulate losing one replica of the shard (0 = the primary;
+        ``wipe=True`` loses its NVM too, forcing a resync to rejoin)."""
+        self.cluster.fail_shard(shard, replica, wipe=wipe)
 
     def failover(self, shard: int):
-        """Promote the shard's backup replica to primary (replication=2)."""
+        """Epoch-fenced promotion of the shard's senior live backup."""
         return self.cluster.failover(shard)
+
+    def group(self, shard: int):
+        """The shard's ``ShardGroup`` (epoch/quorum state, chaos hooks)."""
+        return self.cluster.groups[shard]
 
     def compact(self) -> int:
         return self.cluster.compact()

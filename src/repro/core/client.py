@@ -76,6 +76,12 @@ class ErdaClient:
         # cleaning epoch, fallback — must drop entries, never trust them.
         self.loc_cache: Dict[int, int] = {}
         self.cache_generation = 0
+        # replication epoch this connection's WRITE-path WRs are stamped
+        # with (None = unfenced single-replica store).  A ShardGroup sets it
+        # at install/promotion time; the transport rejects a stamped WR whose
+        # epoch predates a revocation (split-brain fencing — see
+        # fabric.transport.StaleEpochError).  Reads are never stamped.
+        self.epoch: Optional[int] = None
         self.stats = {"reads": 0, "writes": 0, "fallbacks": 0, "repairs": 0,
                       "one_sided_reads": 0, "one_sided_writes": 0,
                       "send_ops": 0, "spec_hits": 0, "spec_misses": 0,
@@ -103,6 +109,12 @@ class ErdaClient:
         self.cache_generation += 1
         self._cleaning_epoch, self._cleaning_heads = \
             self.server.subscribe_cleaning(self, self._on_cleaning_update)
+
+    def set_epoch(self, epoch: Optional[int]) -> None:
+        """Adopt a replication epoch: every subsequent write-path WR carries
+        it, so a later revocation (promotion) fences this connection's
+        in-flight and future writes at the QP."""
+        self.epoch = epoch
 
     # -------------------------------------------------------- cleaning view
     def _on_cleaning_update(self, epoch: int, heads: FrozenSet[int]) -> None:
@@ -144,12 +156,14 @@ class ErdaClient:
 
     def _os_write(self, addr: int, data: bytes) -> None:
         self.stats["one_sided_writes"] += 1
-        self.transport.one_sided_write(addr, data, op="erda.data", qp=self.qp)
+        self.transport.one_sided_write(addr, data, op="erda.data", qp=self.qp,
+                                       epoch=self.epoch)
 
     def _post_os_write(self, addr: int, data: bytes) -> Handle:
         self.stats["one_sided_writes"] += 1
         return self.transport.post(
-            WorkRequest("one_sided_write", op="erda.data", addr=addr, data=data),
+            WorkRequest("one_sided_write", op="erda.data", addr=addr,
+                        data=data, epoch=self.epoch),
             qp=self.qp)
 
     # ------------------------------------------------------------- metadata read
@@ -377,7 +391,8 @@ class ErdaClient:
         return self.transport.post(
             WorkRequest("write_with_imm", op="erda.write_req",
                         handler=lambda: self.server.handle_write_req(
-                            key, val_len, delete=delete)),
+                            key, val_len, delete=delete),
+                        epoch=self.epoch),
             qp=self.qp)
 
     def post_data_write(self, addr: int, rec: bytes) -> Handle:
@@ -417,7 +432,8 @@ class ErdaClient:
         self.stats["send_ops"] += 1
         addr, size, word = self.transport.write_with_imm(
             "erda.write_req",
-            lambda: self.server.handle_write_req(key, len(value)), qp=self.qp)
+            lambda: self.server.handle_write_req(key, len(value)), qp=self.qp,
+            epoch=self.epoch)
         # may raise TornWrite under fault injection — the location cache then
         # keeps the PRE-write word, whose speculative read word-mismatches and
         # falls back to the seed's fresh-read/repair path (never a stale hit)
@@ -436,7 +452,8 @@ class ErdaClient:
             return addr, size, word
 
         return self.transport.send_recv("erda.write_cleaning", _srv,
-                                        req_bytes=len(rec), qp=self.qp)
+                                        req_bytes=len(rec), qp=self.qp,
+                                        epoch=self.epoch)
 
     # ------------------------------------------------------------ batched writes
     def multi_write(self, items: Sequence[Tuple[int, bytes]]) -> None:
@@ -478,7 +495,7 @@ class ErdaClient:
             addr, size, word = self.transport.write_with_imm(
                 "erda.write_req",
                 lambda: self.server.handle_write_req(key, 0, delete=True),
-                qp=self.qp)
+                qp=self.qp, epoch=self.epoch)
             self._os_write(addr, rec)
         self.finish_write(key, addr, size, word, delete=True)
 

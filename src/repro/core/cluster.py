@@ -12,14 +12,17 @@ first point clockwise of ``hash(key)``.  Virtual nodes keep the load spread
 even, and growing the cluster by one shard relocates only ~1/(n+1) of the key
 space — the property that makes online resharding feasible later.
 
-Availability (``replication=2``): every ring slot is a ``ShardGroup`` — a
-primary replica plus a backup replica placed on the ring-successor host — and
-every write mirrors both of its legs to the backup on the backup's own QP
-within the same batch scopes (see ``repro.core.replication``).  Reads stay
-one-sided against the primary.  ``fail_shard(i)`` simulates losing the
-primary's NVM; ``failover(i)`` promotes the backup (§4.2 sweep + client
-reconnect); ``recover_shard(i)`` then re-syncs a fresh rejoining replica from
-the survivor's log and reinstalls mirroring.
+Availability (``replication>=2``): every ring slot is a ``ShardGroup`` — a
+primary replica plus ``replication-1`` backups placed on successive
+ring-successor hosts — and every write mirrors both of its legs to every
+live replica on its own QP within the same batch scopes, acked at a write
+quorum (see ``repro.core.replication``).  Reads stay one-sided against the
+primary; while a primary is down the group serves QUORUM reads across the
+backups instead of going dark.  ``fail_shard(i, replica=j)`` fails one
+replica; ``failover(i)`` promotes the senior live backup under a bumped,
+QP-fenced epoch (a partitioned old primary's stale-epoch writes bounce);
+``recover_shard(i)`` crash-restarts intact members and re-syncs fresh
+replicas for wiped/evicted slots.
 
 Cluster-wide coordination:
   * ``recover()``         — run the §4.2 crash-recovery scan on every shard
@@ -91,24 +94,25 @@ class ErdaCluster:
     def __init__(self, n_shards: int = 4, cfg: Optional[ServerConfig] = None,
                  transport_factory: Optional[Callable[[NVMDevice], object]] = None,
                  vnodes: int = 64, replication: int = 1):
-        if replication not in (1, 2):
-            raise ValueError("replication must be 1 (none) or 2 (primary-backup)")
+        if replication < 1:
+            raise ValueError("replication must be >= 1")
         self.cfg = cfg = cfg or SHARD_CONFIG
         self.replication = replication
         self._transport_factory = transport_factory
         self.ring = HashRing(n_shards, vnodes)
         # each shard connection gets its own QP lane, so per-shard batches are
         # independently doorbell'd and their completions overlap across shards;
-        # backup replicas ride lanes n_shards + i
+        # replica j of shard i rides lane j*n_shards + i and is placed on ring
+        # host (i + j) % n_shards (successive ring successors)
         self.groups: List[ShardGroup] = []
         for i in range(n_shards):
-            primary = self._connect(ErdaServer(cfg), lane=i)
-            backup = backup_host = None
-            if replication == 2:
-                backup_host = (i + 1) % n_shards  # ring-successor placement
-                backup = self._connect(ErdaServer(cfg), lane=n_shards + i)
-            self.groups.append(ShardGroup(i, primary, backup,
-                                          backup_host=backup_host))
+            replicas = [self._connect(ErdaServer(cfg), lane=j * n_shards + i)
+                        for j in range(replication)]
+            hosts = [None] + [(i + j) % n_shards
+                              for j in range(1, replication)]
+            self.groups.append(ShardGroup(i, replicas[0],
+                                          backups=replicas[1:],
+                                          replica_hosts=hosts))
 
     def _connect(self, server: ErdaServer, lane: int) -> ErdaClient:
         t = self._transport_factory(server.dev) if self._transport_factory else None
@@ -173,57 +177,69 @@ class ErdaCluster:
             self.groups[shard].multi_write(shard_items)
 
     # ---------------------------------------------------------------- failover
-    def fail_shard(self, shard: int) -> None:
-        """Simulate shard ``shard``'s primary replica crashing: ops on the
-        shard raise ``ShardDownError`` until either ``failover`` (the NVM is
-        lost, promote the backup) or ``recover_shard`` (crash-restart with
-        media intact, §4.2 repair in place)."""
-        self.groups[shard].fail_primary()
+    def fail_shard(self, shard: int, replica: int = 0, *,
+                   wipe: bool = False) -> None:
+        """Simulate losing shard ``shard``'s replica ``replica`` (0 = the
+        primary).  A down primary degrades the group: reads fall back to
+        quorum reads across the backups, writes raise ``ShardDownError``
+        until ``failover`` promotes or ``recover_shard`` crash-restarts it.
+        A down backup just shrinks the live set — writes keep acking while a
+        write quorum holds.  ``wipe=True`` loses the NVM too: the slot can
+        only rejoin via a fresh resync (``recover_shard``)."""
+        self.groups[shard].fail_replica(replica, wipe=wipe)
 
     def failover(self, shard: int) -> Dict[str, int]:
-        """Promote shard ``shard``'s backup to primary: §4.2 recovery sweep
-        on the promoted replica + client reconnect.  The group keeps serving
-        reads and (unmirrored) writes until ``recover_shard`` re-syncs a new
-        backup."""
+        """Epoch-fenced promotion of shard ``shard``'s most senior live
+        backup: membership drops the old primary, every survivor is
+        §4.2-swept + reconnected, the group epoch bumps and the old epoch's
+        write grant is revoked at every survivor's QP — a partitioned old
+        primary's in-flight writes bounce (StaleEpochError).  The group
+        keeps serving (degraded) until ``recover_shard`` re-syncs fresh
+        replicas."""
         g = self.groups[shard]
         g.promote()
-        return {"promotions": g.promotions,
+        return {"promotions": g.promotions, "epoch": g.epoch,
                 "keys": g.primary.server.table.n_items}
 
     # ---------------------------------------------------------------- recovery
     def recover_shard(self, shard: int) -> Dict[str, int]:
-        """Repair one shard.  Unreplicated (or backup intact): the §4.2
-        recovery scan on each replica, clients reconnect.  After a failover
-        (replicated group running degraded): build a fresh rejoining replica
-        and re-sync it from the survivor's log; other shards keep serving
-        untouched either way."""
+        """Repair one shard back to full strength.  A crashed-in-place
+        primary (media intact, never promoted away): §4.2 recovery scan +
+        reconnect, then resume.  Down backups crash-restart in place when
+        their NVM survived; wiped or promotion-evicted slots get a fresh
+        rejoining replica re-synced from the primary's log.  Other shards
+        keep serving untouched either way."""
         g = self.groups[shard]
-        if self.replication == 2 and g.backup is None:
-            # degraded group: §4.2-sweep the surviving primary FIRST (its
-            # volatile index/tail need the rebuild like any other shard's),
-            # then stream its repaired state into a fresh rejoining replica
-            stats = g.primary.server.recover()
-            g.primary.reconnect()
-            joiner = self._connect(ErdaServer(self.cfg),
-                                   lane=self.n_shards + shard)
-            stats["resynced"] = g.resync_backup(joiner)
-            g.backup_host = (shard + 1) % self.n_shards
-            return stats
-        stats = g.primary.server.recover()
-        # the shard's clients reconnect: size hints may be stale-but-safe
-        # (CRC re-verifies), but the connection-time constants must be
-        # refreshed and LOCATION hints must drop — recovery may have
-        # flipped words back to OLD offsets (§4.2 repair), so a cached word
-        # could otherwise validate a superseded location.  reconnect()
-        # clears the location cache and bumps its generation.
+        if g.primary_down and g.wiped[0]:
+            raise ShardDownError(shard, "primary wiped — failover first")
+        # §4.2-sweep the primary (a crash-restart repairs in place; a healthy
+        # or degraded survivor gets its volatile index/tail rebuilt ahead of
+        # any resync) and reconnect: size hints are stale-but-safe, but
+        # LOCATION hints must drop — recovery may have flipped words back to
+        # OLD offsets (§4.2 repair), so a cached word could otherwise
+        # validate a superseded location
+        stats: Dict[str, int] = dict(g.primary.server.recover())
         g.primary.reconnect()
-        if g.backup is not None:
-            for k, v in g.backup.server.recover().items():
-                stats[f"backup_{k}"] = v
-            g.backup.reconnect()
-        # the repaired primary is back: a crash-restart shard (failed but
-        # never failed-over) resumes serving
+        if g.replicated:
+            g.primary.set_epoch(g.epoch)
+            g.primary.transport.revoke_epochs_below(g.epoch)
         g.primary_down = False
+        # sweep intact live backups too (full-site power loss recovers every
+        # replica); down/wiped/evicted slots go through heal()'s
+        # crash-restart-or-resync paths
+        for i in range(1, len(g.replicas)):
+            if not g.down[i]:
+                for k, v in g.replicas[i].server.recover().items():
+                    stats[f"backup_{k}"] = stats.get(f"backup_{k}", 0) + v
+                g.replicas[i].reconnect()
+                g.replicas[i].set_epoch(g.epoch)
+        if self.replication > 1:
+            def joiner_factory(slot: int) -> ErdaClient:
+                return self._connect(ErdaServer(self.cfg),
+                                     lane=slot * self.n_shards + shard)
+            for k, v in g.heal(joiner_factory).items():
+                stats[k] = stats.get(k, 0) + v
+            g.backup_host = (shard + 1) % self.n_shards
         return stats
 
     def recover(self) -> Dict[str, int]:
@@ -260,14 +276,30 @@ class ErdaCluster:
 
     @property
     def replica_stats(self) -> Dict[str, int]:
-        """Aggregated backup-lane op counters (mirrored-write traffic)."""
+        """Aggregated backup-lane op counters (mirrored-write traffic),
+        summed over every backup replica of every group."""
         total: Dict[str, int] = {}
         for g in self.groups:
-            if g.backup is None:
-                continue
-            for k, v in g.backup.stats.items():
-                total[k] = total.get(k, 0) + v
+            for b in g.backups:
+                for k, v in b.stats.items():
+                    total[k] = total.get(k, 0) + v
         return total
+
+    @property
+    def epoch_bumps(self) -> int:
+        """Total promotions-driven epoch bumps across all groups."""
+        return sum(g.epoch for g in self.groups)
+
+    @property
+    def degraded_reads(self) -> int:
+        """Keys served through quorum reads while a primary was down."""
+        return sum(g.degraded_reads for g in self.groups)
+
+    @property
+    def stale_rejected(self) -> int:
+        """Stale-epoch WQEs bounced at any replica's QP (split-brain writes
+        fenced after a promotion)."""
+        return sum(g.stale_rejected for g in self.groups)
 
     def keys_per_shard(self) -> List[int]:
         return [s.table.n_items for s in self.servers]

@@ -3,8 +3,9 @@
 # InProcessTransport = functional model; SimTransport = same semantics +
 # calibrated DES timing steps, priced per doorbell so batching amortizes.
 from repro.fabric.transport import (MSG_BYTES, ONE_SIDED_VERBS, VERBS, Handle,
-                                    InProcessTransport, OpRecord, Transport,
-                                    WorkRequest, make_transport)
+                                    InProcessTransport, OpRecord,
+                                    StaleEpochError, Transport, WorkRequest,
+                                    make_transport)
 from repro.fabric.sim import (SimTransport, replay_steps, steps_cpu_s,
                               steps_latency_s)
 from repro.netsim.contention import (OpHandle, ServerPort, contended_latency_us,
@@ -19,6 +20,7 @@ __all__ = [
     "InProcessTransport",
     "OpRecord",
     "SimTransport",
+    "StaleEpochError",
     "Transport",
     "WorkRequest",
     "make_transport",

@@ -74,6 +74,24 @@ ONE_SIDED_VERBS = ("one_sided_read", "one_sided_write", "atomic_word_write")
 MSG_BYTES = 64
 
 
+class StaleEpochError(Exception):
+    """A posted write carried a replication epoch older than the one this
+    QP's memory grant was revoked up to (RDMA permission revocation, cf.
+    "The Impact of RDMA on Agreement", 1905.12143): the NIC rejects the WQE
+    at ring time, before it touches memory.  The fencing primitive quorum
+    failover relies on — a partitioned old primary's in-flight writes can
+    never land, let alone be acknowledged, after a promotion."""
+
+    def __init__(self, verb: str, op: str, epoch: int, granted: int):
+        super().__init__(
+            f"{verb}/{op}: posted with epoch {epoch} but QP grant revoked "
+            f"below {granted}")
+        self.verb = verb
+        self.op = op
+        self.epoch = epoch
+        self.granted = granted
+
+
 @dataclasses.dataclass(frozen=True)
 class OpRecord:
     """One verb execution: which primitive, which protocol op, how many bytes."""
@@ -97,6 +115,11 @@ class WorkRequest:
     req_bytes: int = MSG_BYTES
     resp_bytes: Optional[int] = None
     persist: bool = True
+    #: replication epoch the WR was posted under (None = unfenced).  Checked
+    #: against the transport's granted epoch at ring time — see
+    #: ``StaleEpochError``.  Reads never carry an epoch; only write-path WRs
+    #: from a replicated group do.
+    epoch: Optional[int] = None
 
 
 class Handle:
@@ -202,17 +225,20 @@ class Transport(Protocol):
                        qp: int = 0) -> bytes: ...
 
     def one_sided_write(self, addr: int, data: bytes, *, op: str = "",
-                        persist: bool = True, qp: int = 0) -> None: ...
+                        persist: bool = True, qp: int = 0,
+                        epoch: Optional[int] = None) -> None: ...
 
     def write_with_imm(self, op: str, handler: Callable[[], Any], *,
-                       req_bytes: int = MSG_BYTES, qp: int = 0) -> Any: ...
+                       req_bytes: int = MSG_BYTES, qp: int = 0,
+                       epoch: Optional[int] = None) -> Any: ...
 
     def send_recv(self, op: str, handler: Callable[[], Any], *,
                   req_bytes: int = MSG_BYTES,
-                  resp_bytes: Optional[int] = None, qp: int = 0) -> Any: ...
+                  resp_bytes: Optional[int] = None, qp: int = 0,
+                  epoch: Optional[int] = None) -> Any: ...
 
     def atomic_word_write(self, addr: int, word: int, *, op: str = "",
-                          qp: int = 0) -> None: ...
+                          qp: int = 0, epoch: Optional[int] = None) -> None: ...
 
 
 class InProcessTransport:
@@ -227,6 +253,11 @@ class InProcessTransport:
         self.dev = dev
         self.counts: Dict[str, int] = {v: 0 for v in VERBS}
         self.doorbells = 0
+        #: lowest replication epoch this endpoint still accepts writes under.
+        #: ``revoke_epochs_below(e)`` models a new primary revoking the old
+        #: primary's RDMA write grant at promotion.
+        self.granted_epoch = 0
+        self.stale_rejected = 0
         self.trace_enabled = trace
         self.trace: List[OpRecord] = []
         self._sq: Dict[int, List[Handle]] = {}  # per-QP send queues (posted)
@@ -242,6 +273,15 @@ class InProcessTransport:
     def take_trace(self) -> List[OpRecord]:
         t, self.trace = self.trace, []
         return t
+
+    # -------------------------------------------------------- epoch fencing
+    def revoke_epochs_below(self, epoch: int) -> None:
+        """Revoke the write grant of every epoch below ``epoch`` on this
+        endpoint (promotion installs this at each surviving replica).  A WQE
+        posted under an older epoch is rejected at ring time with
+        ``StaleEpochError`` — the one-sided-permission fence of 1905.12143.
+        Monotonic: a grant, once revoked, cannot be re-extended."""
+        self.granted_epoch = max(self.granted_epoch, epoch)
 
     # ----------------------------------------------------------- posted engine
     def post(self, wr: WorkRequest, qp: int = 0) -> Handle:
@@ -320,6 +360,12 @@ class InProcessTransport:
     def _execute(self, wr: WorkRequest) -> Any:
         """Direct-memory execution of one WR (the functional semantics)."""
         verb = wr.verb
+        if wr.epoch is not None and wr.epoch < self.granted_epoch:
+            # permission check happens BEFORE the WR touches memory or the
+            # verb census: the NIC bounces the WQE, flush-with-error drops
+            # the rest of its chain
+            self.stale_rejected += 1
+            raise StaleEpochError(verb, wr.op, wr.epoch, self.granted_epoch)
         if verb == "one_sided_read":
             self._note(verb, wr.op, wr.nbytes)
             return self.dev.read(wr.addr, wr.nbytes).tobytes()
@@ -360,29 +406,32 @@ class InProcessTransport:
                                       nbytes=nbytes), qp)
 
     def one_sided_write(self, addr: int, data: bytes, *, op: str = "",
-                        persist: bool = True, qp: int = 0) -> None:
+                        persist: bool = True, qp: int = 0,
+                        epoch: Optional[int] = None) -> None:
         """``persist=False`` when the scheme pays for persistence elsewhere
         (e.g. RAW's forcing read) — only the sim backend's latency model cares."""
         self._call(WorkRequest("one_sided_write", op=op, addr=addr, data=data,
-                               persist=persist), qp)
+                               persist=persist, epoch=epoch), qp)
 
     def atomic_word_write(self, addr: int, word: int, *, op: str = "",
-                          qp: int = 0) -> None:
+                          qp: int = 0, epoch: Optional[int] = None) -> None:
         self._call(WorkRequest("atomic_word_write", op=op, addr=addr,
-                               word=word), qp)
+                               word=word, epoch=epoch), qp)
 
     # --------------------------------------------------------------- two-sided
     def write_with_imm(self, op: str, handler: Callable[[], Any], *,
-                       req_bytes: int = MSG_BYTES, qp: int = 0) -> Any:
+                       req_bytes: int = MSG_BYTES, qp: int = 0,
+                       epoch: Optional[int] = None) -> Any:
         return self._call(WorkRequest("write_with_imm", op=op, handler=handler,
-                                      req_bytes=req_bytes), qp)
+                                      req_bytes=req_bytes, epoch=epoch), qp)
 
     def send_recv(self, op: str, handler: Callable[[], Any], *,
                   req_bytes: int = MSG_BYTES,
-                  resp_bytes: Optional[int] = None, qp: int = 0) -> Any:
+                  resp_bytes: Optional[int] = None, qp: int = 0,
+                  epoch: Optional[int] = None) -> Any:
         return self._call(WorkRequest("send_recv", op=op, handler=handler,
                                       req_bytes=req_bytes,
-                                      resp_bytes=resp_bytes), qp)
+                                      resp_bytes=resp_bytes, epoch=epoch), qp)
 
     # ------------------------------------------------- non-verb timing hooks
     # These carry no bytes over the fabric; the sim backend turns them into

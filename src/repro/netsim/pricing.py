@@ -167,6 +167,27 @@ def chain_steps(p: SimParams, wrs: List[WrCost]) -> List[Step]:
     return steps
 
 
+def quorum_times_s(lane_times: List[Tuple[float, float]],
+                   quorum: int) -> Tuple[float, float]:
+    """Quorum ack / durability points over per-replica lane times.
+
+    ``lane_times`` holds one ``(completed_s, durable_s)`` pair per replica
+    lane of a mirrored write.  The write is *acknowledged* when the
+    ``quorum``-th lane completes and *durable* when the ``quorum``-th lane's
+    NVM persist lands — order statistics over the two lists independently
+    (the quorum-th completion and the quorum-th persist need not be the same
+    replica).  With r=2 and W=2 this degenerates to the LATER replica on both
+    axes, which is the pricing rule the replication figure asserts."""
+    if not lane_times:
+        raise ValueError("quorum_times_s needs at least one lane")
+    if not 1 <= quorum <= len(lane_times):
+        raise ValueError(
+            f"quorum {quorum} out of range for {len(lane_times)} lanes")
+    completed = sorted(t[0] for t in lane_times)
+    durable = sorted(t[1] for t in lane_times)
+    return completed[quorum - 1], durable[quorum - 1]
+
+
 def chain_nic_occupancy_s(p: SimParams, wrs: List[WrCost]) -> float:
     """Seconds one doorbell chain occupies the shared NIC link — the quantity
     that bounds saturation throughput under contention (the propagation and

@@ -71,7 +71,7 @@ def serve_kv_at_load(offered_kops: float, *, n_clients: int = 4,
                      n_shards: int = 2, vsize: int = 1024,
                      read_frac: float = 0.9, coalesce: bool = True,
                      horizon_s: float = 0.02, seed: int = 0,
-                     p=None, **cfg_kwargs) -> dict:
+                     p=None, replication: int = 1, **cfg_kwargs) -> dict:
     """Serve Erda-backed KV page fetches at a fixed OFFERED load (KOp/s).
 
     Captures doorbell traces of real ``ErdaCluster`` ``multi_read`` /
@@ -80,17 +80,22 @@ def serve_kv_at_load(offered_kops: float, *, n_clients: int = 4,
     (optionally) adaptive doorbell coalescing.  Returns the
     ``run_open_loop`` report: throughput, p50/p95/p99 per op type, drops,
     per-QP HoL stats, port utilization, persistence lag.
+
+    ``replication>1`` serves off a quorum-mirrored page store: every write's
+    mirror legs ride extra lanes pinned to the host ports that hold the
+    backup replicas, so replicated write amplification shows up in NIC
+    utilization and write tail latency.
     """
     import dataclasses
     from repro.netsim.pricing import SimParams
     from repro.serving.load import (OpenLoopConfig, capture_page_fetch_traces,
                                     run_open_loop)
     p = p or SimParams()
-    key = (n_shards, vsize) + dataclasses.astuple(p)
+    key = (n_shards, vsize, replication) + dataclasses.astuple(p)
     traces = _page_traces.get(key)
     if traces is None:
         traces = _page_traces[key] = capture_page_fetch_traces(
-            n_shards=n_shards, vsize=vsize, p=p)
+            n_shards=n_shards, vsize=vsize, p=p, replication=replication)
     cfg = OpenLoopConfig(offered_kops=offered_kops, n_clients=n_clients,
                          horizon_s=horizon_s, coalesce=coalesce,
                          read_frac=read_frac, seed=seed, **cfg_kwargs)

@@ -359,19 +359,31 @@ _PAGE_CAPTURE_BATCHES = (1, 2, 4, 8, 16)
 
 def capture_page_fetch_traces(n_shards: int = 2, vsize: int = 1024,
                               batches: Tuple[int, ...] = _PAGE_CAPTURE_BATCHES,
-                              p: Optional[SimParams] = None) -> TraceTable:
+                              p: Optional[SimParams] = None,
+                              replication: int = 1) -> TraceTable:
     """Capture doorbell traces of REAL ``ErdaCluster`` ``multi_read`` /
     ``multi_write`` page ops at each batch size: the per-shard sub-batches of
     one multi-op become that op's concurrent lanes.  This is the trace table
-    the KV-page serving driver replays under contention."""
+    the KV-page serving driver replays under contention.
+
+    With ``replication>1`` the mirrored write legs appear as extra lanes,
+    each mapped to the PORT of the host that physically holds that backup
+    replica (shard i's backup j lives on host ``(i+j) % n_shards``) — so at
+    load, mirror traffic contends with primary traffic on the shared NICs of
+    the hosts it actually lands on."""
     from repro.core import ServerConfig, make_store
     from repro.fabric.sim import SimTransport
     p = p or SimParams()
     cfg = ServerConfig(device_size=8 << 20, table_capacity=1 << 10,
                        n_heads=1, region_size=1 << 20, segment_size=64 << 10)
     store = make_store("erda-cluster", n_shards=n_shards, cfg=cfg,
-                       transport_factory=lambda dev: SimTransport(dev, p))
-    transports = [c.transport for c in store.cluster.clients]
+                       transport_factory=lambda dev: SimTransport(dev, p),
+                       replication=replication)
+    lanes = []  # (host port index, transport) per replica lane
+    for i, g in enumerate(store.cluster.groups):
+        for j, c in enumerate(g.replicas):
+            port = i if j == 0 else g.replica_hosts[j]
+            lanes.append((port, c.transport))
     table: TraceTable = {"read": {}, "write": {}}
     for b in batches:
         keys = list(range(1, b + 1))
@@ -381,19 +393,20 @@ def capture_page_fetch_traces(n_shards: int = 2, vsize: int = 1024,
         # speculative path is the read_speculation figure's business)
         store.multi_write(items)
         store.multi_write(items)
-        for c in store.cluster.clients:
-            c.loc_cache.clear()
-        for t in transports:
+        for g in store.cluster.groups:
+            for c in g.replicas:
+                c.loc_cache.clear()
+        for _, t in lanes:
             t.take_steps()
             t.take_doorbells()
         got = store.multi_read(keys)
         if got != [v for _, v in items]:  # must check even under -O
             raise RuntimeError("page-trace capture returned wrong values")
-        table["read"][b] = [(s, tr) for s, t in enumerate(transports)
+        table["read"][b] = [(s, tr) for s, t in lanes
                             if (tr := t.take_doorbells())]
         store.multi_write(items)
-        table["write"][b] = [(s, tr) for s, t in enumerate(transports)
+        table["write"][b] = [(s, tr) for s, t in lanes
                              if (tr := t.take_doorbells())]
-        for t in transports:
+        for _, t in lanes:
             t.take_steps()
     return table

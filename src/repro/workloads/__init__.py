@@ -1,5 +1,10 @@
+from repro.workloads.faults import FAULT_KINDS, FaultEvent, FaultPlan
 from repro.workloads.metrics import LatencyRecorder, latency_summary_us, percentile
-from repro.workloads.ycsb import WORKLOADS, Workload, ZipfianGenerator, make_ops
+from repro.workloads.ycsb import (WORKLOADS, Workload, ZipfianGenerator,
+                                  make_ops, run_chaos_workload,
+                                  run_failover_workload, run_store_workload)
 
-__all__ = ["WORKLOADS", "Workload", "ZipfianGenerator", "make_ops",
-           "LatencyRecorder", "latency_summary_us", "percentile"]
+__all__ = ["FAULT_KINDS", "FaultEvent", "FaultPlan", "WORKLOADS", "Workload",
+           "ZipfianGenerator", "make_ops", "LatencyRecorder",
+           "latency_summary_us", "percentile", "run_chaos_workload",
+           "run_failover_workload", "run_store_workload"]

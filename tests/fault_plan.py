@@ -1,0 +1,41 @@
+"""Shared fault-injection harness for the quorum tests.
+
+Re-exports the seeded ``FaultPlan`` schedule (``repro.workloads.faults``) and
+provides the small-geometry quorum clusters + chaos-run wrapper both the unit
+tests and the property suite replay.  The geometry is deliberately tiny: every
+heal / promotion pays a §4.2 full-device recovery scan, and a chaos run
+performs dozens of them.
+"""
+from repro.core import ServerConfig, make_store
+from repro.fabric import InProcessTransport
+from repro.workloads import (FAULT_KINDS, FaultEvent, FaultPlan,
+                             run_chaos_workload)
+
+__all__ = ["FAULT_KINDS", "FaultEvent", "FaultPlan", "CFG", "quorum_store",
+           "traced_quorum_store", "run_seeded_chaos"]
+
+CFG = ServerConfig(device_size=8 << 20, table_capacity=1 << 10,
+                   n_heads=2, region_size=1 << 20, segment_size=32 << 10)
+
+
+def quorum_store(n_shards=2, replication=3, **kw):
+    return make_store("erda-cluster", n_shards=n_shards, cfg=CFG,
+                      replication=replication, **kw)
+
+
+def traced_quorum_store(n_shards=1, replication=3):
+    return quorum_store(
+        n_shards=n_shards, replication=replication,
+        transport_factory=lambda dev: InProcessTransport(dev, trace=True))
+
+
+def run_seeded_chaos(seed: int, *, n_shards=2, replication=3,
+                     workload="ycsb_a", n_ops=120, n_keys=24,
+                     n_faults=4) -> dict:
+    """One deterministic chaos run: same seed → same FaultPlan → same report.
+
+    Raises from inside ``run_chaos_workload`` on any lost acked write, stale
+    read, or split-brain ack; a returned report is itself the proof."""
+    store = quorum_store(n_shards=n_shards, replication=replication)
+    return run_chaos_workload(store, workload=workload, n_ops=n_ops,
+                              n_keys=n_keys, seed=seed, n_faults=n_faults)

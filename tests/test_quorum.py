@@ -1,0 +1,286 @@
+"""Quorum replication (r>=3) with epoch-fenced, split-brain-safe failover.
+
+Covers: the write/read quorum state machine, degraded quorum reads, the
+seeded FaultPlan harness, the split-brain regression (stale-epoch WQEs ring
+after a promotion and must bounce at the fenced QPs), r=3 doorbell/verb
+parity, quorum durability pricing, the chaos-YCSB acceptance run, and the
+DES cost criterion (r=3 acked write <= 1.5x unreplicated; the paper's
+single-op averages untouched).
+"""
+import numpy as np
+import pytest
+
+from fault_plan import (FaultPlan, quorum_store, run_seeded_chaos,
+                        traced_quorum_store)
+from repro.core import ShardDownError, StaleEpochError
+from repro.fabric import InProcessTransport
+from repro.nvmsim.device import NVMDevice
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 must still collect: smoke fallbacks below cover us
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------- seeded fault plans
+def test_fault_plan_is_deterministic_and_replayable():
+    a = FaultPlan.generate(seed=11, n_ops=200, n_shards=3)
+    b = FaultPlan.generate(seed=11, n_ops=200, n_shards=3)
+    assert a == b and a.describe() == b.describe()
+    assert a.events and a.faults
+    # a different seed (almost surely) schedules differently
+    assert any(FaultPlan.generate(seed=s, n_ops=200, n_shards=3) != a
+               for s in (12, 13, 14))
+
+
+def test_fault_plan_invariants_over_many_seeds():
+    """Every fault is healed inside the stream and no shard carries two
+    outstanding faults — the schedule can never legally drop a full quorum."""
+    for seed in range(30):
+        plan = FaultPlan.generate(seed=seed, n_ops=150, n_shards=2,
+                                  n_faults=5)
+        open_fault = {}
+        for e in plan.events:
+            assert 0 < e.op_index < plan.n_ops
+            if e.kind == "heal":
+                assert e.shard in open_fault, plan.describe()
+                del open_fault[e.shard]
+            else:
+                assert e.shard not in open_fault, plan.describe()
+                open_fault[e.shard] = e
+        assert not open_fault, f"unhealed faults: {plan.describe()}"
+        # due() replays exactly the event list, in order
+        replayed = [e for i in range(plan.n_ops) for e in plan.due(i)]
+        assert replayed == plan.events
+
+
+# ------------------------------------------------------ quorum state machine
+def test_r3_quorum_survives_one_backup_loss():
+    s = quorum_store(n_shards=1, replication=3)
+    g = s.cluster.groups[0]
+    assert (g.replication, g.write_quorum, g.read_quorum) == (3, 2, 2)
+    model = {k: bytes([k]) * 40 for k in range(1, 30)}
+    for k, v in model.items():
+        s.write(k, v)
+    s.fail_shard(0, replica=2, wipe=True)  # one backup lost: 2/3 live >= W
+    s.write(5, b"still-acked")
+    model[5] = b"still-acked"
+    for c in (g.primary, g.backups[0]):  # both LIVE members hold every write
+        for k, v in model.items():
+            assert c.read(k) == v
+    # second backup down -> live 1 < W=2: writes refused, primary reads fine
+    s.fail_shard(0, replica=1, wipe=True)
+    with pytest.raises(ShardDownError):
+        s.write(6, b"no-quorum")
+    assert s.read(5) == b"still-acked"
+    stats = s.recover_shard(0)  # heal resyncs BOTH wiped slots from primary
+    assert stats["resynced"] == 2 * len(model)
+    assert g.live_count == 3
+    s.write(6, b"quorum-back")
+    for c in g.replicas:
+        assert c.read(6) == b"quorum-back"
+
+
+def test_degraded_quorum_read_serves_while_primary_is_down():
+    s = quorum_store(n_shards=1, replication=3)
+    g = s.cluster.groups[0]
+    model = {k: bytes([k]) * 30 for k in range(1, 25)}
+    for k, v in model.items():
+        s.write(k, v)
+    s.fail_shard(0)  # crash, NVM intact
+    before = g.degraded_reads
+    for k, v in model.items():
+        assert s.read(k) == v
+    assert s.read(999) is None  # absent keys stay absent under quorum reads
+    assert g.degraded_reads == before + len(model) + 1
+    with pytest.raises(ShardDownError):
+        s.write(1, b"refused")  # degraded group serves reads, never writes
+    info = s.failover(0)
+    assert info["epoch"] == g.epoch == 1
+    s.write(1, b"promoted")
+    assert s.read(1) == b"promoted"
+    assert g.backups[0].read(1) == b"promoted"  # mirrored at the survivors
+
+
+# ----------------------------------------------------------- epoch fencing
+def test_stale_epoch_write_bounces_at_the_transport():
+    t = InProcessTransport(NVMDevice(1 << 20))
+    t.one_sided_write(0, b"\x01" * 8, epoch=0)  # granted epoch 0: fine
+    t.revoke_epochs_below(2)
+    with pytest.raises(StaleEpochError):
+        t.one_sided_write(8, b"\x02" * 8, epoch=1)
+    assert t.stale_rejected == 1
+    t.one_sided_write(8, b"\x03" * 8, epoch=2)  # current epoch passes
+    t.one_sided_write(16, b"\x04" * 8)  # unfenced WRs (reads etc.) unaffected
+    t.revoke_epochs_below(1)  # revocation is monotonic: cannot re-admit
+    with pytest.raises(StaleEpochError):
+        t.one_sided_write(8, b"\x05" * 8, epoch=1)
+    assert t.stale_rejected == 2
+
+
+def test_split_brain_window_stale_wqes_ring_after_promotion():
+    """THE regression: partition the primary mid-write (metadata flipped,
+    data-leg WQEs posted but not rung), promote a backup under a bumped
+    epoch, then let the old coordinator's WQEs ring.  Every surviving QP
+    must reject them (StaleEpochError at the transport), the write must stay
+    un-acked, and a clean retry through the new primary must win."""
+    s = quorum_store(n_shards=1, replication=3)
+    g = s.cluster.groups[0]
+    s.write(7, b"old-value")
+    w = g.begin_partitioned_write(7, b"torn-new")
+    s.fail_shard(0)  # the partition: coordinator cut off from the group
+    rejected_before = g.stale_rejected
+    info = s.failover(0)
+    assert info["epoch"] == 1
+    outcomes = w.ring()  # in-flight doorbells finally reach the NICs
+    # the old primary's own lane completes (it cannot fence itself) but both
+    # survivors bounce the stale-epoch data legs -> 1 completion < W=2
+    assert outcomes.count("rejected") == 2, outcomes
+    assert not w.acked
+    assert g.stale_rejected == rejected_before + 2
+    assert s.read(7) == b"old-value"  # un-acked write never observable
+    s.write(7, b"retried-through-new-primary")
+    assert s.read(7) == b"retried-through-new-primary"
+    for c in g.replicas[:2]:  # new primary + live survivor agree
+        assert c.read(7) == b"retried-through-new-primary"
+
+
+# ------------------------------------------------- doorbell/verb-census parity
+def test_r3_mirrored_write_keeps_two_doorbells_per_lane():
+    """The r=3 quorum write is still 2 doorbells per LANE (flips -> fence ->
+    data legs), and every mirror lane repeats the primary lane's write verbs
+    — widening the group adds lanes, never round trips."""
+    s = traced_quorum_store(n_shards=1, replication=3)
+    g = s.cluster.groups[0]
+    items = [(k, bytes([k]) * 64) for k in range(1, 9)]
+    before = [c.transport.doorbells for c in g.replicas]
+    s.multi_write(items)
+    for c, db0 in zip(g.replicas, before):
+        assert c.transport.doorbells - db0 == 2
+        assert c.transport.counts["write_with_imm"] >= 8
+        assert c.transport.counts["one_sided_write"] >= 8
+    lanes = [[(r.verb, r.op) for r in c.transport.take_trace()
+              if r.verb != "one_sided_read"] for c in g.replicas]
+    assert lanes[0] == lanes[1] == lanes[2]
+
+
+def test_degraded_quorum_read_census_matches_healthy_read():
+    """A degraded quorum read costs each consulted backup lane EXACTLY the
+    healthy read's verb census (2 dependent one-sided reads, zero server
+    CPU) — resilience comes from extra lanes, not extra verbs."""
+    s = traced_quorum_store(n_shards=1, replication=3)
+    g = s.cluster.groups[0]
+    s.write(3, b"x" * 48)
+    g.primary.loc_cache.clear()
+    g.primary.transport.take_trace()
+    assert s.read(3) == b"x" * 48
+    healthy = [(r.verb, r.op) for r in g.primary.transport.take_trace()]
+    assert [v for v, _ in healthy] == ["one_sided_read"] * 2
+    s.fail_shard(0)
+    for c in g.backups:
+        c.loc_cache.clear()
+        c.transport.take_trace()
+    send_before = [c.transport.counts["send_recv"] for c in g.backups]
+    assert s.read(3) == b"x" * 48  # quorum read over R=2 backup lanes
+    for c, sb in zip(g.backups, send_before):
+        lane = [(r.verb, r.op) for r in c.transport.take_trace()]
+        assert [v for v, _ in lane] == [v for v, _ in healthy]
+        assert c.transport.counts["send_recv"] == sb  # still zero server CPU
+
+
+# ------------------------------------------------- quorum durability pricing
+def test_quorum_durability_is_the_later_replicas_persist_leg():
+    from benchmarks.schemes_des import mirrored_write_times_us
+    from repro.netsim.pricing import quorum_times_s
+    # order statistics: r=2/W=2 acks AND persists at the LATER replica
+    acked, durable = quorum_times_s([(10.0, 30.0), (12.0, 25.0)], 2)
+    assert (acked, durable) == (12.0, 30.0)
+    assert quorum_times_s([(10.0, 30.0), (12.0, 25.0), (11.0, 40.0)], 2) \
+        == (11.0, 30.0)
+    with pytest.raises(ValueError):
+        quorum_times_s([(1.0, 1.0)], 2)
+    # the figure path prices the same rule off replayed doorbell traces
+    for r, w in ((2, 2), (3, 2)):
+        t = mirrored_write_times_us(1024, 8, replication=r, quorum=w)
+        per_durable = sorted(d for _, d in t["per_lane"])
+        assert t["durable_us"] == pytest.approx(per_durable[w - 1])
+        assert t["durable_us"] >= t["acked_us"]
+        assert t["all_lanes_us"] >= t["durable_us"]
+
+
+def test_replication_figure_carries_durable_columns():
+    from benchmarks.figures import REPLICATION_BATCHES, bench_replication
+    for row in bench_replication(vsizes=(1024,)):
+        for b in REPLICATION_BATCHES:
+            assert row[f"durable_b{b}"] >= row[f"repl_b{b}"] * 0.99, row
+
+
+# --------------------------------------------------------- the DES cost bound
+def test_quorum_write_overlap_bound_and_paper_averages():
+    """THE acceptance criterion: the r=3 quorum-acked batched write stays
+    within 1.5x of the unreplicated write (mirror lanes overlap), degraded
+    quorum reads stay near the healthy read, and the paper's single-op
+    averages are untouched by the feature."""
+    from benchmarks.schemes_des import (batched_latency_us,
+                                        degraded_read_latency_us,
+                                        mirrored_write_times_us,
+                                        op_latency_us)
+    for batch in (1, 8):
+        unrepl = batched_latency_us("erda", "write", 1024, batch) * batch
+        t = mirrored_write_times_us(1024, batch, replication=3)
+        assert t["acked_us"] <= 1.5 * unrepl, (batch, t, unrepl)
+    healthy = op_latency_us("erda", "read", 1024)
+    assert degraded_read_latency_us(1024) <= 1.25 * healthy
+    assert op_latency_us("erda", "read", 1024) == pytest.approx(60.77, abs=2.0)
+    assert op_latency_us("redo", "read", 1024) == pytest.approx(92.47, abs=2.0)
+
+
+# ----------------------------------------------- serving page store at r=3
+def test_serving_page_store_survives_two_failovers_at_r3():
+    from repro.serving.kv_store import ErdaKVPageStore
+    store = ErdaKVPageStore(store=quorum_store(n_shards=2, replication=3))
+    arrays = [np.arange(i + 3, dtype=np.int64) for i in range(8)]
+    for i, a in enumerate(arrays):
+        store.put_page(11, "kv", i, a)
+    for _ in range(2):  # r=3 tolerates losing the primary twice over
+        store.fail_shard(0)
+        store.failover(0)
+    assert store.store.group(0).epoch == 2
+    for a, p in zip(arrays, store.get_pages(11, "kv", list(range(8)))):
+        np.testing.assert_array_equal(p, a)
+
+
+# ------------------------------------------------ chaos acceptance + property
+def test_chaos_ycsb_zero_lost_acked_writes_zero_stale_reads():
+    """The ISSUE's acceptance run: kills, heals and mid-write partitions on
+    an r=3 cluster under YCSB — and the fencing actually fired."""
+    r = run_seeded_chaos(0, n_ops=300, n_keys=40, n_faults=6)
+    assert (r["lost_acked_writes"], r["stale_reads"]) == (0, 0)
+    assert r["faults"] == 6 and r["kills"] >= 1
+    assert r["partitions"] >= 1 and r["splitbrain_rejections"] >= 1
+    assert r["stale_rejected"] >= r["splitbrain_rejections"]
+    assert r["failovers"] >= 1 and r["epoch_bumps"] >= r["failovers"] - 1
+    assert r["reads"] + r["writes"] == r["n_ops"]
+
+
+CHAOS_PROPERTY = ("no interleaving of kills/heals/partitions may yield a "
+                  "stale read or lost acked write at r=3")
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_property_chaos_never_loses_or_stales(seed):
+        r = run_seeded_chaos(seed, n_ops=80, n_keys=20, n_faults=3)
+        assert (r["lost_acked_writes"], r["stale_reads"]) == (0, 0), \
+            CHAOS_PROPERTY
+
+
+@pytest.mark.parametrize("seed", [1, 4, 9])
+def test_smoke_chaos_never_loses_or_stales(seed):
+    """Seeded fallback for the hypothesis property above — always runs, so
+    tier-1 keeps this coverage without the dependency."""
+    r = run_seeded_chaos(seed, n_ops=80, n_keys=20, n_faults=3)
+    assert (r["lost_acked_writes"], r["stale_reads"]) == (0, 0), \
+        CHAOS_PROPERTY

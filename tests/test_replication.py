@@ -123,13 +123,17 @@ def test_failover_promotes_backup_and_serves_all_acked_writes():
     model.pop(17)
     victim = s.shard_for_key(40)
     dead_server = s.cluster.servers[victim]
+    g = s.cluster.groups[victim]
     s.fail_shard(victim)
-    with pytest.raises(ShardDownError):
-        s.read(40)
+    # the degraded group keeps SERVING reads (quorum read off the backup
+    # lane) instead of going dark; only writes are refused until promotion
+    assert s.read(40) == model[40]
+    assert g.degraded_reads >= 1
     with pytest.raises(ShardDownError):
         s.write(40, b"rejected")
     info = s.failover(victim)
     assert info["promotions"] == 1
+    assert info["epoch"] == 1  # promotion is an epoch bump (fencing)
     assert s.cluster.servers[victim] is not dead_server  # backup promoted
     for k, v in model.items():
         assert s.read(k) == v, f"key {k} lost in failover"
@@ -210,7 +214,11 @@ def test_failover_driver_with_explicit_shard_not_on_op_path():
                               value_size=32, seed=seed,
                               kill_at=n_ops - 1, shard=shard)
     assert r["killed_shard"] == shard
-    assert r["failovers"] == 1            # the sweep performed the failover
+    # an all-read stream never writes to the dead shard, and quorum reads
+    # keep serving it degraded — the driver's pre-sweep promotion restores
+    # full service (and the epoch telemetry shows it happened)
+    assert r["failovers"] == 1
+    assert r["epoch_bumps"] == 1
 
 
 def test_torn_primary_write_is_unacknowledged_but_contained():
