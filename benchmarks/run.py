@@ -15,6 +15,13 @@ import sys
 
 sys.path.insert(0, "src")
 
+#: every figure name `--only` may select — kept in sync with the want()
+#: sections below so a typo fails loudly instead of silently running nothing
+FIGURES = ("latency", "throughput", "cpu_cost", "cleaning", "cluster",
+           "batching", "replication", "quorum", "serving_load", "serving_slo",
+           "read_speculation", "ycsb_driver", "nvm_writes", "kernels",
+           "checkpoint", "roofline")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -23,6 +30,11 @@ def main() -> None:
                     help="comma-separated figure names to run (default: all)")
     args, _ = ap.parse_known_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
+    unknown = only - set(FIGURES)
+    if unknown:
+        print(f"unknown figure name(s): {', '.join(sorted(unknown))}\n"
+              f"valid figures: {', '.join(FIGURES)}", file=sys.stderr)
+        sys.exit(2)
 
     def want(name: str) -> bool:
         return not only or name in only
@@ -139,6 +151,50 @@ def main() -> None:
                   f"qp_depth={r['qp_max_depth_hi']} "
                   f"hol_ms={r['hol_wait_ms_hi']} "
                   f"kops@{top}={r[f'kops@{top}']}")
+
+    if want("serving_slo"):
+        from benchmarks.figures import (SLO_LOADS, YCSB_CONTENDED_THREADS,
+                                        bench_serving_slo)
+        rows = bench_serving_slo()
+        all_rows += rows
+        top = SLO_LOADS[-1]
+        t_max = YCSB_CONTENDED_THREADS[-1]
+        for r in rows:
+            check = r.get("check")
+            if check == "sharedqp_speedup":
+                print(f"serving_slo/sharedqp_speedup,,"
+                      f"per_client={r['per_client_sat_kops']}KOp/s "
+                      f"shared_qp={r['shared_qp_sat_kops']}KOp/s "
+                      f"speedup={r['speedup']}")
+            elif check == "slo_goodput":
+                print(f"serving_slo/slo_goodput@{r['load_kops']},,"
+                      f"slo={r['slo_us']}us "
+                      f"queue_goodput={r['queue_goodput_kops']}KOp/s "
+                      f"slo_goodput={r['slo_goodput_kops']}KOp/s "
+                      f"slo_thr={r['slo_thr_kops']}KOp/s "
+                      f"shed={r['slo_shed']} late={r['slo_late']} "
+                      f"p99={r['slo_p99_us']}us")
+            elif check == "functional":
+                print(f"serving_slo/functional,,"
+                      f"dispatches={r['dispatches']} "
+                      f"stale_or_lost={r['stale_or_lost']} "
+                      f"ordering_violations={r['ordering_violations']} "
+                      f"coalesced_equals_sequential="
+                      f"{r['coalesced_equals_sequential']}")
+            elif check == "ycsb_contended":
+                print(f"serving_slo/ycsb_contended/{r['workload']},,"
+                      f"t1={r['kops@t1']}KOp/s "
+                      f"t{t_max}={r[f'kops@t{t_max}']}KOp/s "
+                      f"speedup={r['speedup_tmax']}x "
+                      f"saturating={r['saturating']}")
+            else:
+                print(f"serving_slo/{r['mode']},,"
+                      f"sat={r['saturation_kops']}KOp/s "
+                      f"kops@{top}={r[f'kops@{top}']} "
+                      f"batch_hi={r['mean_batch_hi']} "
+                      f"batch_p95={r['batch_p95_hi']} "
+                      f"head_wait_p99={r['head_wait_p99_us_hi']}us "
+                      f"nic_util={r['nic_util_hi']}")
 
     if want("read_speculation"):
         from benchmarks.figures import bench_read_speculation

@@ -87,6 +87,64 @@ class OpHandle:
         return max(0.0, self.durable_at - self.completed_at)
 
 
+class QPServiceEstimator:
+    """Per-QP service-time statistics driving SLO-aware admission: an EMA of
+    the QP's drain interval per service unit (the serving layer's unit is one
+    dispatched doorbell batch), plus a closed-form latency floor.
+
+    The caller feeds it inter-completion gaps, and ONLY while the QP is
+    continuously busy (the previous completion landed after this unit's
+    dispatch) — that gap is how fast the pipeline actually drains.  Two
+    tempting alternatives are both wrong: the raw dispatch→completion span
+    double-counts queueing (the span already includes waiting behind
+    in-flight units, and the feasibility estimate multiplies by the
+    outstanding count again), shedding nearly everything at saturation; and
+    after-idle spans are latency samples (~the 60µs RTT, not a drain cost),
+    which inflate the rate EMA at low load and cause spurious shedding.
+
+    The estimate separates the *rate* term from the *latency* term:
+    ``now + units_ahead * per_unit_s + floor_s``.  ``per_unit_s`` is the
+    drain EMA (seeded from NIC occupancy, the serialized resource that
+    bounds drain); ``floor_s`` is the uncontended completion latency of one
+    op (propagation pipelines, so it is paid once, not per queued unit).
+    Working in batch units rather than per-op rates also sidesteps a Jensen
+    trap: completions arrive in bursts, and an EMA over alternating tiny and
+    huge per-op gaps lands far from the aggregate drain rate, while the
+    batch-gap EMA degrades gracefully.  The serving report surfaces the
+    stats so the estimator is inspectable."""
+    __slots__ = ("per_unit_s", "floor_s", "alpha", "observations",
+                 "min_s", "max_s")
+
+    def __init__(self, seed_s: float, floor_s: float = 0.0,
+                 alpha: float = 0.25):
+        self.per_unit_s = seed_s
+        self.floor_s = floor_s
+        self.alpha = alpha
+        self.observations = 0
+        self.min_s = seed_s
+        self.max_s = seed_s
+
+    def observe(self, gap_s: float) -> None:
+        self.per_unit_s = (1 - self.alpha) * self.per_unit_s \
+            + self.alpha * gap_s
+        self.observations += 1
+        self.min_s = min(self.min_s, gap_s)
+        self.max_s = max(self.max_s, gap_s)
+
+    def estimate_completion_s(self, now_s: float, units_ahead: int) -> float:
+        """Estimated completion time of a request with ``units_ahead``
+        dispatched-but-incomplete units in front of it on this QP: drain the
+        pipeline at the observed rate, then one uncontended service."""
+        return now_s + units_ahead * self.per_unit_s + self.floor_s
+
+    def stats(self) -> dict:
+        return {"per_unit_us": round(self.per_unit_s * 1e6, 3),
+                "floor_us": round(self.floor_s * 1e6, 3),
+                "observations": self.observations,
+                "min_us": round(self.min_s * 1e6, 3),
+                "max_us": round(self.max_s * 1e6, 3)}
+
+
 def replay_doorbells(trace: List[DoorbellEvent], qp: FifoLock, port: ServerPort,
                      op: Optional[OpHandle] = None) -> Generator:
     """Turn one op's captured doorbell trace into a contended DES process.

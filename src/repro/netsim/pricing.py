@@ -188,6 +188,47 @@ def quorum_times_s(lane_times: List[Tuple[float, float]],
     return completed[quorum - 1], durable[quorum - 1]
 
 
+def chain_completion_s(p: SimParams, wrs: List[WrCost]) -> float:
+    """Client-visible completion time of ONE doorbell chain on an otherwise
+    idle fabric, under the contended decomposition: occupancy legs + wire
+    propagation + (serialized) server CPU + CQE drain.  This is the closed
+    form of what ``netsim.contention.replay_doorbells`` prices when nothing
+    queues, and it is deliberately independent of how many *streams*
+    contributed WRs to the chain — a shared-QP doorbell that merges several
+    clients' runs prices exactly like the same chain posted by one client.
+    For a single-stream chain the regression tests pin this against the DES
+    replay, so cross-client merging can never drift the pricing table."""
+    one = [w for w in wrs if w.one_sided]
+    two = [w for w in wrs if not w.one_sided]
+    t = 0.0
+    if one:
+        t += p.t_nic_doorbell_s + sum(p.t_nic_wqe_s + w.xfer_s for w in one)
+        t += p.t_prop_one_sided_s + len(one) * p.t_cq_entry_s
+    if two:
+        t += sum(p.t_nic_wqe_s + w.xfer_s for w in two)
+        t += p.t_prop_req_s
+        t += sum(w.cpu_s for w in two)
+        t += sum(p.t_nic_wqe_s + w.resp_xfer_s for w in two)
+        t += p.t_prop_resp_s + len(two) * p.t_cq_entry_s
+    return t
+
+
+def trace_completion_s(p: SimParams, events: List["DoorbellEvent"]) -> float:
+    """Uncontended completion time of a whole doorbell trace: chains and
+    client compute serialize on the client path; ``ServerAsync`` work is
+    background CPU and costs the client nothing.  Used to SEED the per-QP
+    service-time EMA the SLO-aware admission stage sheds by, so feasibility
+    estimates are defined from the very first arrival (deterministically)
+    rather than only after the first completion."""
+    t = 0.0
+    for ev in events:
+        if isinstance(ev, ClientCompute):
+            t += ev.seconds
+        elif isinstance(ev, DoorbellTrace):
+            t += chain_completion_s(p, list(ev.wrs))
+    return t
+
+
 def chain_nic_occupancy_s(p: SimParams, wrs: List[WrCost]) -> float:
     """Seconds one doorbell chain occupies the shared NIC link — the quantity
     that bounds saturation throughput under contention (the propagation and

@@ -13,6 +13,9 @@ _LAZY = {
     "run_open_loop": ("repro.serving.load", "run_open_loop"),
     "sweep_open_loop": ("repro.serving.load", "sweep_open_loop"),
     "validate_schedule": ("repro.serving.load", "validate_schedule"),
+    "check_schedule_legality": ("repro.serving.load",
+                                "check_schedule_legality"),
+    "QPScheduler": ("repro.serving.load", "QPScheduler"),
     "capture_page_fetch_traces": ("repro.serving.load",
                                   "capture_page_fetch_traces"),
     "event_trace_bytes": ("repro.serving.load", "event_trace_bytes"),

@@ -70,8 +70,11 @@ _page_traces: Dict[Tuple, dict] = {}
 def serve_kv_at_load(offered_kops: float, *, n_clients: int = 4,
                      n_shards: int = 2, vsize: int = 1024,
                      read_frac: float = 0.9, coalesce: bool = True,
-                     horizon_s: float = 0.02, seed: int = 0,
-                     p=None, replication: int = 1, **cfg_kwargs) -> dict:
+                     share_qp: bool = False, slo_us: Optional[float] = None,
+                     admission: str = "queue", horizon_s: float = 0.02,
+                     seed: int = 0, p=None, replication: int = 1,
+                     capture_batches: Optional[Tuple[int, ...]] = None,
+                     **cfg_kwargs) -> dict:
     """Serve Erda-backed KV page fetches at a fixed OFFERED load (KOp/s).
 
     Captures doorbell traces of real ``ErdaCluster`` ``multi_read`` /
@@ -81,22 +84,36 @@ def serve_kv_at_load(offered_kops: float, *, n_clients: int = 4,
     ``run_open_loop`` report: throughput, p50/p95/p99 per op type, drops,
     per-QP HoL stats, port utilization, persistence lag.
 
+    ``share_qp=True`` merges doorbells ACROSS the client streams sharing
+    each (host, shard) QP instead of per client; ``slo_us`` gives every
+    request a deadline and turns on goodput accounting, and
+    ``admission="slo"`` sheds by earliest infeasible deadline instead of
+    queue position (see ``repro.serving.load``).
+
     ``replication>1`` serves off a quorum-mirrored page store: every write's
     mirror legs ride extra lanes pinned to the host ports that hold the
     backup replicas, so replicated write amplification shows up in NIC
-    utilization and write tail latency.
+    utilization and write tail latency — and under ``share_qp=True`` the
+    mirror lanes coalesce on the same shared QPs as the primary traffic.
     """
     import dataclasses
     from repro.netsim.pricing import SimParams
     from repro.serving.load import (OpenLoopConfig, capture_page_fetch_traces,
                                     run_open_loop)
     p = p or SimParams()
-    key = (n_shards, vsize, replication) + dataclasses.astuple(p)
+    key = (n_shards, vsize, replication, capture_batches) \
+        + dataclasses.astuple(p)
     traces = _page_traces.get(key)
     if traces is None:
+        kwargs = {} if capture_batches is None \
+            else {"batches": capture_batches}
         traces = _page_traces[key] = capture_page_fetch_traces(
-            n_shards=n_shards, vsize=vsize, p=p, replication=replication)
+            n_shards=n_shards, vsize=vsize, p=p, replication=replication,
+            **kwargs)
     cfg = OpenLoopConfig(offered_kops=offered_kops, n_clients=n_clients,
                          horizon_s=horizon_s, coalesce=coalesce,
+                         share_qp=share_qp,
+                         slo_s=None if slo_us is None else slo_us * 1e-6,
+                         admission=admission,
                          read_frac=read_frac, seed=seed, **cfg_kwargs)
     return run_open_loop(traces, cfg, p)

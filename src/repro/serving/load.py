@@ -1,16 +1,16 @@
-"""Open-loop serving at load: Poisson arrivals, bounded admission queues, and
-adaptive doorbell coalescing over the contention-aware DES.
+"""Open-loop serving at load: Poisson arrivals, SLO-aware admission, and
+adaptive doorbell coalescing — per client stream or across the client streams
+sharing a QP — over the contention-aware DES.
 
 Closed-loop clients (issue, wait, repeat) can never overload a system — their
 arrival rate falls as latency rises, so saturation throughput and the p99
 tail are invisible.  This driver is **open-loop**: requests arrive by a
 Poisson process at a configured *offered load* regardless of how the system
-is doing (modeled on MaxText's queue-fed offline-inference driver), queue in
-a *bounded* per-client admission queue (arrivals beyond the bound are dropped
-and counted — honesty about overload), and are issued as doorbell chains over
-the arbitrated fabric of ``repro.netsim.contention``: per-QP FIFO send
-queues, a shared per-NIC link, server CPU, and an NVM persistence engine
-(completion ≠ durability).
+is doing (modeled on MaxText's queue-fed offline-inference driver), pass an
+admission stage (see below), and are issued as doorbell chains over the
+arbitrated fabric of ``repro.netsim.contention``: per-QP FIFO send queues, a
+shared per-NIC link, server CPU, and an NVM persistence engine (completion ≠
+durability).
 
 **Adaptive doorbell coalescing** is the optimization the contention model
 makes real: under queueing pressure the dispatcher merges admitted requests
@@ -24,11 +24,28 @@ op.  The policy is queue-depth driven with a bounded wait:
     ``max_wait_s`` (anchored at the head request's arrival) for more;
   * dispatch the run at the largest captured batch size that fits.
 
-At low load the target decays to 1 and requests dispatch on arrival (p50 ≈
-the uncontended single-op latency, minus at most one bounded wait); past
-saturation queues deepen, the target grows to ``b_max``, and the fixed
-doorbell + RTT cost amortizes across the batch — which is precisely what
-raises the NIC-bound saturation throughput.
+**Shared-QP coalescing** (``share_qp=True``) lifts the merge from per-client
+to per-QP: every client stream targeting the same (host, shard) lanes feeds
+ONE ``QPScheduler``, which merges the same-kind run *prefixes* of multiple
+streams into a single doorbell.  The ordering invariant is per stream: a
+batch contains, for each contributing stream, a contiguous prefix of that
+stream's FIFO queue (all of one kind), so any dispatch order is a legal
+interleaving of the per-stream FIFOs — a read is never reordered past a
+write *within any stream*.  The bounded wait is anchored at the OLDEST head
+arrival across the streams, and the EMA run-length target is per QP group.
+A single stream's runs are capped by its own read/write alternation; pooling
+n streams multiplies the mergeable run at the same ``b_max`` — which is
+where the next saturation win past per-client coalescing comes from.
+
+**SLO-aware admission** (``slo_s=...``, ``admission="slo"``) replaces the
+blunt queue-position drop: every request carries a deadline (arrival +
+``slo_s``), and the admission stage sheds the queued request with the
+earliest *infeasible* deadline — estimated from the per-QP service-time EMA
+(``QPServiceEstimator``, seeded from the closed-form uncontended pricing) —
+instead of tail-dropping at ``queue_bound``.  A request that is going to
+miss its deadline anyway is shed before it wastes service the still-feasible
+requests behind it could use.  Runs with ``slo_s`` set report **goodput**
+(completions that met their deadline) alongside raw throughput and drops.
 
 Timing is replayed from doorbell traces captured off the REAL client code
 (``SimTransport.take_doorbells``); functional correctness of the coalescing
@@ -37,7 +54,8 @@ dispatched batches against a real functional store — coalescing must change
 timing, never results.
 
 Everything is seeded and event-ordering is deterministic, so a fixed
-(seed, config) reproduces the run's event trace byte for byte.
+(seed, config) reproduces the run's event trace byte for byte — in every
+mode, shared-QP and SLO admission included.
 """
 from __future__ import annotations
 
@@ -48,16 +66,19 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.netsim.contention import (OpHandle, ServerPort, qp_stats_summary,
-                                     replay_doorbells)
-from repro.netsim.pricing import SimParams
+from repro.netsim.contention import (OpHandle, QPServiceEstimator, ServerPort,
+                                     qp_stats_summary, replay_doorbells,
+                                     trace_nic_occupancy_s)
+from repro.netsim.pricing import SimParams, trace_completion_s
 from repro.netsim.sim import FifoLock, Simulator, run_process
-from repro.workloads.metrics import LatencyRecorder
+from repro.workloads.metrics import (LatencyRecorder, histogram_summary,
+                                     latency_summary_us)
 from repro.workloads.ycsb import ZipfianGenerator
 
-#: one dispatchable unit: [(shard index, doorbell trace)] — a single-server
-#: op is one lane; a cluster multi-op is one lane per touched shard, replayed
-#: concurrently (each shard's chain rides that shard's QP and server port)
+#: one dispatchable unit: [(lane index, doorbell trace)] — a single-server
+#: op is one lane; a cluster multi-op is one lane per touched shard (plus,
+#: replicated, one per mirror host), replayed concurrently (each lane's chain
+#: rides that lane's QP and host port)
 Lanes = List[Tuple[int, list]]
 
 #: {"read"|"write": {batch_size: Lanes}} — captured off the real store code
@@ -67,13 +88,20 @@ TraceTable = Dict[str, Dict[int, Lanes]]
 @dataclasses.dataclass
 class OpenLoopConfig:
     offered_kops: float            # total offered load, KOp/s, split per client
-    n_clients: int = 4             # independent request streams (one QP each)
+    n_clients: int = 4             # independent request streams
     horizon_s: float = 0.04
     coalesce: bool = True          # False = per-op doorbells (the baseline)
+    share_qp: bool = False         # True = all streams share one QP per lane,
+                                   # coalescing merges runs ACROSS streams
     b_max: int = 16                # largest coalesced batch
-    max_wait_s: float = 20e-6      # bounded wait anchored at head arrival
-    posted_depth: int = 8          # max dispatched-but-incomplete batches/QP
-    queue_bound: int = 512         # admission queue bound (beyond = dropped)
+    max_wait_s: float = 20e-6      # bounded wait anchored at oldest head arrival
+    posted_depth: int = 8          # max dispatched-but-incomplete batches per
+                                   # stream's share of its QP
+    queue_bound: int = 512         # admission queue bound (admission="queue")
+    slo_s: Optional[float] = None  # per-request deadline = arrival + slo_s;
+                                   # setting it turns on goodput accounting
+    admission: str = "queue"       # "queue" (bound drop) | "slo" (shed by
+                                   # earliest infeasible deadline; needs slo_s)
     read_frac: float = 1.0         # KV page fetches by default
     n_keys: int = 512              # keyspace for the zipfian key stream
     seed: int = 0
@@ -81,80 +109,172 @@ class OpenLoopConfig:
     collect_schedule: bool = False  # record dispatched (kind, keys) batches
 
 
-class _OpenLoopClient:
-    """One request stream: its admission queue, its QPs (one per shard), and
-    the adaptive coalescing dispatcher."""
+class _Stream:
+    """One client's request stream: its pre-generated arrivals and its FIFO
+    admission queue.  Queued entries are ``(arrival_t, kind, key, seq)`` —
+    ``seq`` is the per-stream admission sequence number the legality property
+    checks dispatch order against."""
 
-    def __init__(self, idx: int, sim: Simulator, ports: List[ServerPort],
-                 traces: TraceTable, cfg: OpenLoopConfig,
-                 arrivals: List[Tuple[float, str, int]],
-                 recorder: LatencyRecorder, out: dict):
+    __slots__ = ("idx", "arrivals", "queue", "next_arrival", "seq")
+
+    def __init__(self, idx: int, arrivals: List[Tuple[float, str, int]]):
         self.idx = idx
+        self.arrivals = arrivals
+        self.queue: deque = deque()  # (arrival_t, kind, key, seq)
+        self.next_arrival = 0
+        self.seq = 0
+
+
+class QPScheduler:
+    """The dispatcher for one QP group: one or more client streams feeding
+    one set of per-lane QPs.
+
+    Per-client mode builds one scheduler per stream with private QPs (the
+    classic layout: every client owns a QP per lane).  Shared-QP mode builds
+    ONE scheduler whose streams are all the clients and whose QPs are shared
+    per lane — the merge rule then coalesces same-kind run prefixes across
+    streams into a single doorbell.  Either way the scheduler owns the
+    adaptive run-length target (EMA), the bounded wait anchored at the oldest
+    head arrival, the per-QP service-time estimator the SLO admission sheds
+    by, and the batch-size / head-wait telemetry the report surfaces."""
+
+    def __init__(self, name: str, sim: Simulator, ports: List[ServerPort],
+                 traces: TraceTable, cfg: OpenLoopConfig,
+                 streams: List[_Stream], qps: Dict[int, FifoLock],
+                 recorder: LatencyRecorder, out: dict, p: SimParams):
+        self.name = name
         self.sim = sim
         self.ports = ports
         self.traces = traces
         self.cfg = cfg
-        self.arrivals = arrivals
+        self.streams = streams
+        self.qps = qps
         self.recorder = recorder
         self.out = out  # shared run-level accumulators
-        self.qps: Dict[int, FifoLock] = {
-            shard: FifoLock(sim, f"c{idx}.qp{shard}")
-            for shard in sorted({s for by_b in traces.values()
-                                 for lanes in by_b.values()
-                                 for s, _ in lanes})}
+        self.log_idx = streams[0].idx if len(streams) == 1 else -1
         self.sizes = {kind: sorted(by_b) for kind, by_b in traces.items()}
         self.b_max = min(cfg.b_max, max(max(s) for s in self.sizes.values()))
-        self.queue: deque = deque()  # (arrival_t, kind, key)
-        self.in_flight = 0
+        # posted_depth is per SCHEDULER, deliberately NOT scaled by the
+        # number of streams sharing the QP: a deep shared pipeline would let
+        # every arrival dispatch eagerly as a singleton, moving all queueing
+        # into the NIC where neither the coalescer nor the SLO admission can
+        # see it.  Keeping the backlog in the admission queues is what lets
+        # cross-stream runs form (and makes the shared-vs-per-client
+        # comparison conservative: shared mode gets 1/n the posted batches).
+        self.posted_depth = cfg.posted_depth
+        self.in_flight = 0           # dispatched-but-incomplete batches
+        self.outstanding_ops = 0     # requests inside those batches
         self.target = 1.0            # adaptive batch target (EMA of run lengths)
+        kind0 = "read" if "read" in self.sizes else next(iter(self.sizes))
+        b0 = min(self.sizes[kind0])
+        # rate seed: per-batch occupancy of the busiest NIC lane (the
+        # serialized resource that bounds drain); latency floor: one op's
+        # uncontended completion — both closed-form, so estimates are
+        # deterministic from the very first arrival
+        seed_s = max(trace_nic_occupancy_s(tr, p)
+                     for _, tr in traces[kind0][b0])
+        floor_s = max(trace_completion_s(p, tr) for _, tr in traces[kind0][b0])
+        self.service = QPServiceEstimator(seed_s, floor_s)
+        self.batch_hist: Dict[int, int] = {}
+        self.head_waits: List[float] = []  # dispatch_t - oldest head arrival
         self.handles: List[OpHandle] = []
-        self._next_arrival = 0
         self._armed_deadline: Optional[float] = None
+        self._last_done_t = 0.0  # drain reference for the service estimator
 
     # ------------------------------------------------------------- arrivals
     def start(self) -> None:
-        self._schedule_next_arrival()
+        for s in self.streams:
+            self._schedule_next_arrival(s)
 
-    def _schedule_next_arrival(self) -> None:
-        if self._next_arrival >= len(self.arrivals):
+    def _schedule_next_arrival(self, s: _Stream) -> None:
+        if s.next_arrival >= len(s.arrivals):
             return
-        t, kind, key = self.arrivals[self._next_arrival]
-        self._next_arrival += 1
-        self.sim.at(t, lambda: self._arrive(t, kind, key))
+        t, kind, key = s.arrivals[s.next_arrival]
+        s.next_arrival += 1
+        self.sim.at(t, lambda: self._arrive(s, t, kind, key))
 
-    def _arrive(self, t: float, kind: str, key: int) -> None:
-        self._schedule_next_arrival()
-        if len(self.queue) >= self.cfg.queue_bound:
+    def _arrive(self, s: _Stream, t: float, kind: str, key: int) -> None:
+        self._schedule_next_arrival(s)
+        if self.cfg.admission == "queue" and \
+                len(s.queue) >= self.cfg.queue_bound:
             self.out["dropped"] += 1
-            self._log("drop", kind, 0)
+            self._log(s.idx, "drop", kind, 0)
             return
-        self.queue.append((t, kind, key))
-        self._log("arrive", kind, len(self.queue))
+        s.queue.append((t, kind, key, s.seq))
+        s.seq += 1
+        self._log(s.idx, "arrive", kind, len(s.queue))
         self._kick()
 
     # ----------------------------------------------------------- dispatcher
-    def _head_run(self) -> Tuple[str, int]:
-        kind = self.queue[0][1]
-        run = 1
-        while (run < len(self.queue) and run < self.b_max
-               and self.queue[run][1] == kind):
-            run += 1
-        return kind, run
+    def _busy_streams(self) -> List[_Stream]:
+        """Streams with queued work, oldest head (then lowest idx) first —
+        the deterministic merge order."""
+        return sorted((s for s in self.streams if s.queue),
+                      key=lambda s: (s.queue[0][0], s.idx))
+
+    def _available_run(self, busy: List[_Stream]) -> Tuple[str, float, int, bool]:
+        """The mergeable run at the heads of the queues: the oldest head's
+        kind, its arrival (the bounded-wait anchor), the total same-kind
+        prefix length across streams (≤ b_max), and whether waiting could
+        grow it (nothing of another kind queued anywhere and run < b_max)."""
+        kind = busy[0].queue[0][1]
+        head_t = busy[0].queue[0][0]
+        total_queued = sum(len(s.queue) for s in busy)
+        run = 0
+        for s in busy:
+            if s.queue[0][1] != kind:
+                continue
+            for req in s.queue:
+                if req[1] != kind or run == self.b_max:
+                    break
+                run += 1
+            if run == self.b_max:
+                break
+        can_grow = run == total_queued and run < self.b_max
+        return kind, head_t, run, can_grow
 
     def _snap(self, kind: str, n: int) -> int:
         """Largest captured batch size ≤ n."""
         return max(b for b in self.sizes[kind] if b <= n)
 
+    def _shed_infeasible(self) -> None:
+        """SLO admission: shed queued requests by earliest infeasible
+        deadline.  The earliest deadline in the group is the oldest arrival
+        (deadlines are arrival + slo), i.e. the head the dispatcher would
+        serve first; if even that one cannot complete by its deadline —
+        estimated from the per-QP service-time EMA with every batch already
+        dispatched ahead of it — serving it would be wasted work, so it is
+        shed and the next-earliest head is considered."""
+        slo = self.cfg.slo_s
+        while True:
+            busy = self._busy_streams()
+            if not busy:
+                return
+            s = busy[0]
+            t0, kind, _key, _seq = s.queue[0]
+            est = self.service.estimate_completion_s(self.sim.now,
+                                                     self.in_flight)
+            if est <= t0 + slo:
+                return
+            s.queue.popleft()
+            self.out["shed"] += 1
+            self._log(s.idx, "shed", kind, len(s.queue))
+
     def _kick(self) -> None:
-        while self.in_flight < self.cfg.posted_depth and self.queue:
-            kind, run = self._head_run()
+        while self.in_flight < self.posted_depth:
+            if self.cfg.admission == "slo":
+                self._shed_infeasible()
+            busy = self._busy_streams()
+            if not busy:
+                return
+            kind, head_t, run, can_grow = self._available_run(busy)
             if self.cfg.coalesce:
                 tgt = min(self.b_max, max(1, int(round(self.target))))
-                head_t = self.queue[0][0]
-                waited = self.sim.now - head_t >= self.cfg.max_wait_s - 1e-15
-                # the run can only grow if nothing of another kind is queued
-                # behind it; otherwise waiting buys nothing — dispatch now
-                can_grow = run == len(self.queue) and run < self.b_max
+                # exact comparison against the same float the wait timer was
+                # armed with: past ~1s of sim time an absolute epsilon is
+                # smaller than one ulp and a >=-with-slack test can disagree
+                # with the timer's own firing time, re-arming forever
+                waited = self.sim.now >= head_t + self.cfg.max_wait_s
                 if can_grow and run < tgt and not waited:
                     self._arm(head_t + self.cfg.max_wait_s)
                     return
@@ -163,12 +283,25 @@ class _OpenLoopClient:
                                + 0.25 * min(run, self.b_max))
             else:
                 b = 1
-            batch = [self.queue.popleft() for _ in range(b)]
-            self._dispatch(kind, batch)
+            batch = self._pop_batch(kind, b)
+            self._dispatch(kind, head_t, batch)
+
+    def _pop_batch(self, kind: str, b: int) -> List[Tuple]:
+        """Pop ``b`` requests as same-kind prefixes of the busy streams in
+        merge order — each stream contributes a contiguous FIFO prefix, so
+        the batch is a legal interleaving of the per-stream orders."""
+        batch: List[Tuple] = []
+        for s in self._busy_streams():
+            while s.queue and s.queue[0][1] == kind and len(batch) < b:
+                t, k, key, seq = s.queue.popleft()
+                batch.append((t, k, key, s.idx, seq))
+            if len(batch) == b:
+                break
+        return batch
 
     def _arm(self, deadline: float) -> None:
         if (self._armed_deadline is not None
-                and self._armed_deadline <= deadline + 1e-18):
+                and self._armed_deadline <= deadline):
             return
         self._armed_deadline = deadline
 
@@ -179,46 +312,65 @@ class _OpenLoopClient:
 
         self.sim.at(max(deadline, self.sim.now), fire)
 
-    def _dispatch(self, kind: str, batch: List[Tuple[float, str, int]]) -> None:
+    def _dispatch(self, kind: str, head_t: float, batch: List[Tuple]) -> None:
         b = len(batch)
         self.in_flight += 1
+        self.outstanding_ops += b
         self.out["batch_hist"][b] = self.out["batch_hist"].get(b, 0) + 1
+        self.batch_hist[b] = self.batch_hist.get(b, 0) + 1
+        self.head_waits.append(self.sim.now - head_t)
         if self.cfg.collect_schedule:
-            self.out["schedule"].append((kind, [k for _, _, k in batch]))
-        self._log("dispatch", kind, b)
-        lanes = [(s, tr) for s, tr in self.traces[kind][b] if tr]
+            self.out["schedule"].append((kind, [k for _, _, k, _, _ in batch]))
+            self.out["schedule_detail"].append(
+                (kind, [(sidx, seq, k) for _, _, k, sidx, seq in batch]))
+        self._log(self.log_idx, "dispatch", kind, b)
+        lanes = [(lane, tr) for lane, tr in self.traces[kind][b] if tr]
         op = OpHandle()
         self.handles.append(op)
-        arrivals = [t for t, _, _ in batch]
+        arrivals = [t for t, _, _, _, _ in batch]
+        dispatched_at = self.sim.now
         remaining = [len(lanes)]
 
         def lane_done():
             remaining[0] -= 1
             if remaining[0] == 0:
-                self._op_done(kind, arrivals, op)
+                self._op_done(kind, arrivals, dispatched_at, op)
 
         if not lanes:  # pragma: no cover - captured traces are never empty
-            self._op_done(kind, arrivals, op)
+            self._op_done(kind, arrivals, dispatched_at, op)
             return
-        for shard, tr in lanes:
+        for lane, tr in lanes:
             run_process(self.sim,
-                        replay_doorbells(tr, self.qps[shard],
-                                         self.ports[shard], op), lane_done)
+                        replay_doorbells(tr, self.qps[lane],
+                                         self.ports[lane], op), lane_done)
 
-    def _op_done(self, kind: str, arrivals: List[float], op: OpHandle) -> None:
+    def _op_done(self, kind: str, arrivals: List[float], dispatched_at: float,
+                 op: OpHandle) -> None:
         now = self.sim.now
         op.complete(now)
+        # rate observations are inter-completion gaps, and only when the QP
+        # was continuously busy across the gap (previous completion after
+        # this batch's dispatch) — an after-idle span is a latency sample,
+        # already covered by the estimator's closed-form floor, and feeding
+        # it to the rate EMA would inflate it at low load (see
+        # QPServiceEstimator)
+        if self._last_done_t >= dispatched_at:
+            self.service.observe(now - self._last_done_t)
+        self._last_done_t = now
         for t0 in arrivals:
             self.recorder.record(kind, now - t0)
+            if self.cfg.slo_s is not None and now <= t0 + self.cfg.slo_s:
+                self.out["in_slo"] += 1
         self.out["completed"] += len(arrivals)
-        self._log("done", kind, len(arrivals))
+        self._log(self.log_idx, "done", kind, len(arrivals))
         self.in_flight -= 1
+        self.outstanding_ops -= len(arrivals)
         self._kick()
 
-    def _log(self, event: str, kind: str, n: int) -> None:
+    def _log(self, idx: int, event: str, kind: str, n: int) -> None:
         if self.cfg.collect_trace:
             self.out["event_trace"].append(
-                (round(self.sim.now, 12), self.idx, event, kind, n))
+                (round(self.sim.now, 12), idx, event, kind, n))
 
 
 def poisson_arrivals(cfg: OpenLoopConfig, client: int) -> List[Tuple[float, str, int]]:
@@ -238,27 +390,43 @@ def poisson_arrivals(cfg: OpenLoopConfig, client: int) -> List[Tuple[float, str,
 
 def run_open_loop(traces: TraceTable, cfg: OpenLoopConfig,
                   p: Optional[SimParams] = None) -> dict:
-    """Run one open-loop point: offered load → throughput, p50/p95/p99 (per
-    op type), drops, per-QP queue-depth / HoL-blocking stats, NIC/CPU/NVM
-    utilization, and completion-vs-durability lag."""
+    """Run one open-loop point: offered load → throughput (and goodput when
+    an SLO is set), p50/p95/p99 (per op type), drops/sheds, per-QP
+    queue-depth / HoL-blocking stats, per-QP-group batch-size histograms and
+    head-of-line wait percentiles, NIC/CPU/NVM utilization, and
+    completion-vs-durability lag."""
+    if cfg.admission not in ("queue", "slo"):
+        raise ValueError(f"unknown admission policy {cfg.admission!r}")
+    if cfg.admission == "slo" and cfg.slo_s is None:
+        raise ValueError("admission='slo' needs slo_s (the deadline)")
     p = p or SimParams()
     sim = Simulator()
-    n_shards = 1 + max(s for by_b in traces.values()
-                       for lanes in by_b.values() for s, _ in lanes)
-    ports = [ServerPort(sim, p, f"srv{j}") for j in range(n_shards)]
+    lane_ids = sorted({lane for by_b in traces.values()
+                       for lanes in by_b.values() for lane, _ in lanes})
+    ports = [ServerPort(sim, p, f"srv{j}") for j in range(1 + max(lane_ids))]
     recorder = LatencyRecorder()
-    out = {"completed": 0, "dropped": 0, "batch_hist": {},
-           "event_trace": [], "schedule": []}
-    clients = [_OpenLoopClient(i, sim, ports, traces, cfg,
-                               poisson_arrivals(cfg, i), recorder, out)
+    out = {"completed": 0, "dropped": 0, "shed": 0, "in_slo": 0,
+           "batch_hist": {}, "event_trace": [], "schedule": [],
+           "schedule_detail": []}
+    streams = [_Stream(i, poisson_arrivals(cfg, i))
                for i in range(cfg.n_clients)]
-    offered = sum(len(c.arrivals) for c in clients)
-    for c in clients:
-        c.start()
+    if cfg.share_qp:
+        qps = {lane: FifoLock(sim, f"qp{lane}") for lane in lane_ids}
+        scheds = [QPScheduler("shared", sim, ports, traces, cfg, streams,
+                              qps, recorder, out, p)]
+    else:
+        scheds = [QPScheduler(f"c{s.idx}", sim, ports, traces, cfg, [s],
+                              {lane: FifoLock(sim, f"c{s.idx}.qp{lane}")
+                               for lane in lane_ids},
+                              recorder, out, p)
+                  for s in streams]
+    offered = sum(len(s.arrivals) for s in streams)
+    for sch in scheds:
+        sch.start()
     sim.run(until=cfg.horizon_s)
 
-    qps = {qp.name: qp for c in clients for qp in c.qps.values()}
-    handles = [h for c in clients for h in c.handles]
+    qps = {qp.name: qp for sch in scheds for qp in sch.qps.values()}
+    handles = [h for sch in scheds for h in sch.handles]
     lags = [h.persist_lag_s() for h in handles
             if h.completed_at is not None and h.durable_at is not None]
     persisting = [l for l in lags if l > 0]
@@ -270,15 +438,25 @@ def run_open_loop(traces: TraceTable, cfg: OpenLoopConfig,
         "offered_arrivals": offered,
         "n_clients": cfg.n_clients,
         "coalesce": cfg.coalesce,
+        "share_qp": cfg.share_qp,
         "horizon_s": cfg.horizon_s,
         "completed": out["completed"],
         "throughput_kops": round(out["completed"] / cfg.horizon_s / 1e3, 2),
         "dropped": out["dropped"],
         "drop_rate": round(out["dropped"] / max(offered, 1), 4),
+        "shed": out["shed"],
         "latency": recorder.summary(),
         "dispatches": dispatches,
         "mean_batch": round(out["completed"] / max(dispatches, 1), 2),
         "batch_hist": dict(sorted(out["batch_hist"].items())),
+        # per-QP-group coalescing telemetry: how big the merged doorbells got
+        # and how long heads waited for them — the EMA target made inspectable
+        "coalescing": {"per_qp": {
+            sch.name: {"batch_hist": dict(sorted(sch.batch_hist.items())),
+                       "batch": histogram_summary(sch.batch_hist),
+                       "head_wait_us": latency_summary_us(sch.head_waits),
+                       "service": sch.service.stats()}
+            for sch in scheds}},
         "qp": qp_stats_summary(qps),
         "ports": [port.stats(cfg.horizon_s) for port in ports],
         "persist": {
@@ -290,10 +468,20 @@ def run_open_loop(traces: TraceTable, cfg: OpenLoopConfig,
             "unpersisted_at_horizon": unpersisted,
         },
     }
+    if cfg.slo_s is not None:
+        report["slo"] = {
+            "slo_us": round(cfg.slo_s * 1e6, 2),
+            "admission": cfg.admission,
+            "in_slo": out["in_slo"],
+            "late": out["completed"] - out["in_slo"],
+            "shed": out["shed"],
+            "goodput_kops": round(out["in_slo"] / cfg.horizon_s / 1e3, 2),
+        }
     if cfg.collect_trace:
         report["event_trace"] = out["event_trace"]
     if cfg.collect_schedule:
         report["schedule"] = out["schedule"]
+        report["schedule_detail"] = out["schedule_detail"]
     return report
 
 
@@ -322,8 +510,9 @@ def validate_schedule(store, schedule: List[Tuple[str, List[int]]],
     dispatcher issued — ``multi_read`` / ``multi_write`` in dispatch order —
     checking every read against the dict model of acknowledged writes.  The
     dispatch order is a legal serialization of the per-client FIFO streams
-    (the coalescer never reorders within a stream, and batches are same-kind
-    runs), so any mismatch is a stale or lost read: the count must be zero.
+    (the coalescer — per-client or shared-QP — never reorders within a
+    stream, and batches are same-kind runs), so any mismatch is a stale or
+    lost read: the count must be zero.
 
     Returns the read values too, so a property test can assert that the
     coalesced execution returns byte-identical results to a sequential
@@ -351,6 +540,31 @@ def validate_schedule(store, schedule: List[Tuple[str, List[int]]],
             "stale_or_lost": stale_or_lost, "read_values": read_values}
 
 
+def check_schedule_legality(schedule_detail: List[Tuple[str, list]],
+                            n_streams: int) -> dict:
+    """Check that a dispatched schedule is a legal interleaving of the
+    per-stream FIFOs: flattened in dispatch order, every stream's admission
+    sequence numbers appear strictly increasing (shed requests may leave
+    gaps, but order is never violated), and every batch is same-kind with
+    each stream contributing a contiguous run.  Returns the violation count
+    (must be zero) plus per-stream dispatch counts."""
+    last_seq = {i: -1 for i in range(n_streams)}
+    violations = 0
+    per_stream = {i: 0 for i in range(n_streams)}
+    for kind, entries in schedule_detail:
+        seen_streams: List[int] = []
+        for sidx, seq, _key in entries:
+            if seq <= last_seq[sidx]:
+                violations += 1  # reordered within a stream
+            last_seq[sidx] = seq
+            per_stream[sidx] += 1
+            if sidx not in seen_streams:
+                seen_streams.append(sidx)
+            elif seen_streams[-1] != sidx:
+                violations += 1  # a stream's contribution is not contiguous
+    return {"violations": violations, "per_stream": per_stream}
+
+
 # ------------------------------------------- KV page-fetch trace capture
 #: per-shard geometry for page-trace capture (small: traces only depend on
 #: verb sizes, not device capacity)
@@ -370,7 +584,9 @@ def capture_page_fetch_traces(n_shards: int = 2, vsize: int = 1024,
     each mapped to the PORT of the host that physically holds that backup
     replica (shard i's backup j lives on host ``(i+j) % n_shards``) — so at
     load, mirror traffic contends with primary traffic on the shared NICs of
-    the hosts it actually lands on."""
+    the hosts it actually lands on, and under ``share_qp=True`` a mirror
+    lane rides the SAME shared QP as every other stream's traffic to that
+    host."""
     from repro.core import ServerConfig, make_store
     from repro.fabric.sim import SimTransport
     p = p or SimParams()

@@ -38,6 +38,29 @@ def latency_summary_us(latencies_s: Iterable[float]) -> Dict[str, float]:
     return out
 
 
+def histogram_summary(hist: Dict[int, int]) -> Dict[str, float]:
+    """Summary of an integer-valued histogram ``{value: count}`` (e.g.
+    coalesced-batch sizes): n, mean, max and the nearest-rank percentiles —
+    computed over the counts, never materializing the expanded samples."""
+    total = sum(hist.values())
+    if not total:
+        return {"n": 0, "mean": float("nan"), "max": float("nan"),
+                **{f"p{q:g}": float("nan") for q in PERCENTILES}}
+    items = sorted(hist.items())
+    out = {"n": total,
+           "mean": round(sum(v * c for v, c in items) / total, 2),
+           "max": float(items[-1][0])}
+    for q in PERCENTILES:
+        rank = max(1, -(-int(q * total) // 100))  # ceil(q*n/100), >= 1
+        cum = 0
+        for v, c in items:
+            cum += c
+            if cum >= rank:
+                out[f"p{q:g}"] = float(v)
+                break
+    return out
+
+
 class LatencyRecorder:
     """Accumulates (op kind, latency seconds) samples and summarizes them
     overall and per kind."""

@@ -64,6 +64,96 @@ def make_ops(workload: str, n_ops: int, n_keys: int, seed: int = 0):
 
 
 # --------------------------------------------------------------- store driver
+def _sim_lanes(store) -> List[Tuple[int, object]]:
+    """``[(host port index, transport)]`` for a SimTransport-backed store.
+
+    A cluster store exposes one lane per replica, mapped to the port of the
+    host that physically holds it (shard i's backup j lives on host
+    ``replica_hosts[j]``); a single-server store is one lane on port 0.
+    Raises for stores whose transports cannot capture doorbells (the
+    contended replay needs ``take_doorbells``)."""
+    cluster = getattr(store, "cluster", None)
+    if cluster is not None:
+        lanes = [(i if j == 0 else g.replica_hosts[j], c.transport)
+                 for i, g in enumerate(cluster.groups)
+                 for j, c in enumerate(g.replicas)]
+    else:
+        t = getattr(store, "transport", None)
+        if t is None:
+            t = getattr(getattr(store, "client", None), "transport", None)
+        lanes = [(0, t)] if t is not None else []
+    if not lanes or not all(hasattr(t, "take_doorbells") for _, t in lanes):
+        raise TypeError(
+            "contended_threads needs a SimTransport-backed store (the "
+            "contended replay works from captured doorbell traces)")
+    return lanes
+
+
+def _replay_contended(units: List[Tuple[str, int, list]], n_threads: int,
+                      p=None) -> dict:
+    """Replay captured per-op doorbell units as ``n_threads`` CLOSED-LOOP
+    client threads over the contended fabric: shared per-host ``ServerPort``
+    resources, one ``FifoLock`` QP per (thread, host).
+
+    Units are dealt round-robin to threads in stream order; each thread
+    issues its next unit only when the previous one's lanes all completed —
+    the closed loop.  Unlike the uncontended functional pass (which scales
+    linearly by construction), this shows honest saturation: throughput
+    flattens once the shared NICs/CPUs are busy."""
+    from repro.netsim.contention import (ServerPort, qp_stats_summary,
+                                         replay_doorbells)
+    from repro.netsim.pricing import SimParams
+    from repro.netsim.sim import FifoLock, Simulator, run_process
+    from repro.workloads.metrics import LatencyRecorder
+
+    p = p or SimParams()
+    sim = Simulator()
+    n_ports = 1 + max(port for _, _, lanes in units for port, _ in lanes)
+    ports = [ServerPort(sim, p, f"srv{j}") for j in range(n_ports)]
+    recorder = LatencyRecorder()
+    end_t = [0.0]
+    qps_all = {}
+
+    def start_thread(t: int) -> None:
+        mine = units[t::n_threads]
+        qps = {j: FifoLock(sim, f"t{t}.qp{j}") for j in range(n_ports)}
+        qps_all.update({qp.name: qp for qp in qps.values()})
+
+        def issue(i: int) -> None:
+            if i == len(mine):
+                return
+            kind, n_ops, lanes = mine[i]
+            t0 = sim.now
+            remaining = [len(lanes)]
+
+            def lane_done():
+                remaining[0] -= 1
+                if remaining[0] == 0:
+                    recorder.record(kind, (sim.now - t0) / max(n_ops, 1))
+                    end_t[0] = max(end_t[0], sim.now)
+                    issue(i + 1)
+
+            for port_idx, tr in lanes:
+                run_process(sim, replay_doorbells(tr, qps[port_idx],
+                                                  ports[port_idx]), lane_done)
+
+        issue(0)
+
+    for t in range(n_threads):
+        start_thread(t)
+    sim.run()
+    elapsed = end_t[0]
+    total_ops = sum(n for _, n, _ in units)
+    return {"n_threads": n_threads, "units": len(units),
+            "ops_replayed": total_ops,
+            "elapsed_s": round(elapsed, 9),
+            "throughput_kops": round(total_ops / elapsed / 1e3, 2)
+            if elapsed else 0.0,
+            "latency": recorder.summary(),
+            "qp": qp_stats_summary(qps_all),
+            "ports": [port.stats(elapsed or 1.0) for port in ports]}
+
+
 def _op_runs(ops, batch_size: int):
     """Split an op stream into maximal same-kind runs of ≤ batch_size — the
     unit a batched client can issue as one multi-op without reordering a
@@ -81,7 +171,8 @@ def _op_runs(ops, batch_size: int):
 
 def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
                        value_size: int = 128, seed: int = 0,
-                       batch_size: int = 0) -> dict:
+                       batch_size: int = 0, contended_threads: int = 0,
+                       p=None) -> dict:
     """Drive any ``make_store(...)`` object (single-server Erda, sharded
     ``erda-cluster``, or a baseline) with a YCSB op stream, checking every
     read against a dict model.  Returns op counts + the store's own stats —
@@ -89,11 +180,34 @@ def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
 
     ``batch_size > 1`` enables batched mode: same-kind op runs (up to
     batch_size) go through the store's doorbell-batched ``multi_read`` /
-    ``multi_write`` instead of one call per op."""
+    ``multi_write`` instead of one call per op.
+
+    ``contended_threads > 0`` retrofits the closed loop onto the contended
+    fabric: the functional pass (which still checks every read) doubles as
+    trace capture — each issued unit's doorbell lanes are recorded off the
+    store's ``SimTransport``s — and the captured units are then replayed as
+    that many closed-loop threads over shared ``ServerPort`` resources with
+    per-thread ``FifoLock`` QPs.  The result gains a ``"contended"`` section
+    (throughput, latency percentiles, QP/port stats) whose
+    throughput-vs-threads curve saturates honestly instead of scaling
+    linearly the way the uncontended functional timing would."""
     ops = make_ops(workload, n_ops, n_keys, seed)
     rng = np.random.default_rng(seed + 2)
     model = {}
     batched = batch_size and batch_size > 1
+    capture_lanes = _sim_lanes(store) if contended_threads else []
+    units: List[Tuple[str, int, list]] = []
+
+    def _drain():
+        for _, t in capture_lanes:
+            t.take_doorbells()
+            t.take_steps()
+
+    def _capture(kind: str, n: int) -> None:
+        unit = [(port, tr) for port, t in capture_lanes
+                if (tr := t.take_doorbells())]
+        if unit:
+            units.append((kind, n, unit))
     # load phase: every key gets an initial value (YCSB's load stage);
     # keys are 1-based: 0 is the empty-slot sentinel
     load = [(k + 1, rng.bytes(value_size)) for k in range(n_keys)]
@@ -104,6 +218,8 @@ def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
         for k, v in load:
             store.write(k, v)
     model.update(load)
+    if contended_threads:
+        _drain()  # the load phase's doorbells are not part of the run
     n_reads = n_writes = 0
     if batched:
         for kind, keys in _op_runs(ops, batch_size):
@@ -119,6 +235,8 @@ def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
                 items = [(k, rng.bytes(value_size)) for k in keys]
                 store.multi_write(items)
                 model.update(items)
+            if contended_threads:
+                _capture(kind, len(keys))
     else:
         for op, k in ops:
             k += 1
@@ -132,8 +250,10 @@ def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
                 v = rng.bytes(value_size)
                 store.write(k, v)
                 model[k] = v
+            if contended_threads:
+                _capture("read" if op == "read" else "update", 1)
     stats = dict(store.stats)
-    return {"workload": workload, "n_ops": len(ops), "n_keys": n_keys,
+    result = {"workload": workload, "n_ops": len(ops), "n_keys": n_keys,
             "reads": n_reads, "writes": n_writes, "batch_size": batch_size,
             # location-cache effectiveness, surfaced top-level for reports
             # (baseline stores have no speculation → zeros)
@@ -141,6 +261,10 @@ def run_store_workload(store, workload: str, n_ops: int, n_keys: int,
             "spec_misses": stats.get("spec_misses", 0),
             "spec_invalidations": stats.get("spec_invalidations", 0),
             "store_stats": stats}
+    if contended_threads:
+        result["contended"] = _replay_contended(units, contended_threads, p)
+        _drain()  # leave no stale captures behind for the caller
+    return result
 
 
 # ----------------------------------------------------- kill-a-shard scenario
