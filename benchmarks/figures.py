@@ -700,3 +700,100 @@ def bench_cluster_scaling() -> List[Dict]:
                          **{f"t{t}": round(per_t[t], 1) for t in CLUSTER_THREADS},
                          "avg_kops": round(float(np.mean(list(per_t.values()))), 2)})
     return rows
+
+
+# --------------------------- online resharding (beyond the paper: §ROADMAP)
+def bench_resharding() -> List[Dict]:
+    """Elastic scale-out/scale-in of a live cluster, three views:
+
+      * bytes-moved — an online ``add_shard``/``remove_shard`` over a loaded
+        functional cluster migrates ≈ the minimal keyspace fraction the ring
+        remap implies (the CI criterion bounds the ratio at 1.5×);
+      * elastic YCSB — the acceptance run: a replicated cluster scales
+        4 → 6 → 3 under a live op stream with zero lost acked writes, zero
+        stale reads, and the pre-cutover straggler write fenced;
+      * serving dip — the DES view: foreground open-loop page serving while
+        a migration's captured doorbell chains contend on the same NICs,
+        with the schedulers swapping to the grown cluster's lane tables
+        mid-run — the throughput dip must be bounded.
+
+    A calibration row pins the uncontended 62/92 µs Erda/RAW read latencies
+    so the resharding machinery provably leaves the timing model alone."""
+    from repro.core import ServerConfig, make_store
+    from repro.serving.load import (OpenLoopConfig, capture_migration_traces,
+                                    capture_page_fetch_traces, run_open_loop)
+    from repro.workloads.ycsb import run_elastic_workload
+
+    rows: List[Dict] = []
+    # calibration pin: the headline per-op latencies are untouched
+    rows.append({"figure": "resharding", "check": "calibration",
+                 "erda_read_us": round(op_latency_us("erda", "read", 1024), 2),
+                 "raw_read_us": round(op_latency_us("raw", "read", 1024), 2)})
+
+    # bytes moved vs the minimal keyspace fraction (functional, r=1)
+    cfg = ServerConfig(device_size=64 << 20, table_capacity=1 << 13,
+                       n_heads=2, region_size=2 << 20, segment_size=64 << 10)
+    vsize, n_keys = 64, 3000
+    for op in ("add", "remove"):
+        store = make_store("erda-cluster", n_shards=4, cfg=cfg)
+        for k in range(1, n_keys + 1):
+            store.write(k, bytes([k % 251]) * vsize)
+        rs = store.add_shard() if op == "add" else store.remove_shard(0)
+        rep = rs.report()
+        minimal = rep["moved_fraction"] * n_keys * vsize
+        rows.append({"figure": "resharding", "check": "bytes_moved",
+                     "op": op, "n_keys": n_keys, "value_size": vsize,
+                     "moved_fraction": round(rep["moved_fraction"], 4),
+                     "bytes_moved": rep["bytes_moved"],
+                     "minimal_bytes": round(minimal, 1),
+                     "ratio": round(rep["bytes_moved"] / minimal, 3),
+                     "keys_copied": rep["keys_copied"],
+                     "cutovers": rep["cutovers"],
+                     "cleanup_removed": rep["cleanup_removed"]})
+
+    # elastic YCSB acceptance: 4 -> 6 -> 3 under load, replicated
+    store = make_store("erda-cluster", n_shards=4, replication=2,
+                       cfg=ServerConfig(device_size=16 << 20,
+                                        table_capacity=1 << 10, n_heads=2,
+                                        region_size=1 << 20,
+                                        segment_size=32 << 10))
+    r = run_elastic_workload(store, n_ops=800, n_keys=160)
+    rows.append({"figure": "resharding", "check": "elastic_ycsb",
+                 "workload": r["workload"], "n_ops": r["n_ops"],
+                 "shards_path": r["shards_path"],
+                 "lost_acked_writes": r["lost_acked_writes"],
+                 "stale_reads": r["stale_reads"],
+                 "straggler_rejections": r["straggler_rejections"],
+                 "stale_rejected": r["stale_rejected"],
+                 "dual_reads": r["dual_reads"], "deletes": r["deletes"],
+                 "bytes_moved": r["bytes_moved"],
+                 "minimal_bytes": r["minimal_bytes"],
+                 "max_ratio": r["max_ratio"]})
+
+    # serving dip: foreground page fetches while migration chains contend
+    p = SimParams()
+    traces4 = capture_page_fetch_traces(n_shards=4, p=p)
+    traces5 = capture_page_fetch_traces(n_shards=5, p=p)
+    chains = capture_migration_traces(n_shards=4, n_keys=96, p=p)
+    # past the 4-shard saturation knee (~1.1 MOp/s), so migration bytes
+    # compete for NIC time the foreground actually wants
+    base_cfg = dict(offered_kops=2500, n_clients=8, horizon_s=0.02,
+                    share_qp=True, read_frac=0.9)
+    base = run_open_loop(traces4, OpenLoopConfig(**base_cfg), p)
+    mid = base_cfg["horizon_s"] / 2
+    during = run_open_loop(
+        traces4, OpenLoopConfig(**base_cfg), p,
+        lane_events=[(mid, traces5)],
+        background=[(mid + 2e-5 * i, port, tr)
+                    for i, (port, tr) in enumerate(chains)])
+    after = run_open_loop(traces5, OpenLoopConfig(**base_cfg), p)
+    dip = during["throughput_kops"] / base["throughput_kops"]
+    rows.append({"figure": "resharding", "check": "serving_dip",
+                 "offered_kops": base_cfg["offered_kops"],
+                 "base_kops": base["throughput_kops"],
+                 "during_kops": during["throughput_kops"],
+                 "after_kops": after["throughput_kops"],
+                 "dip_ratio": round(dip, 3),
+                 "migration_chains": during["background_chains"]["completed"],
+                 "lane_events": during["lane_events"]})
+    return rows

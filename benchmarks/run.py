@@ -19,8 +19,8 @@ sys.path.insert(0, "src")
 #: sections below so a typo fails loudly instead of silently running nothing
 FIGURES = ("latency", "throughput", "cpu_cost", "cleaning", "cluster",
            "batching", "replication", "quorum", "serving_load", "serving_slo",
-           "read_speculation", "ycsb_driver", "nvm_writes", "kernels",
-           "checkpoint", "roofline")
+           "read_speculation", "resharding", "ycsb_driver", "nvm_writes",
+           "kernels", "checkpoint", "roofline")
 
 
 def main() -> None:
@@ -230,6 +230,36 @@ def main() -> None:
                   f"spec_hits={r['spec_hits']} spec_misses={r['spec_misses']} "
                   f"spec_invalidations={r['spec_invalidations']}")
         all_rows += rows
+
+    if want("resharding"):
+        from benchmarks.figures import bench_resharding
+        rows = bench_resharding()
+        all_rows += rows
+        for r in rows:
+            if r["check"] == "calibration":
+                print(f"resharding/calibration,{r['erda_read_us']},"
+                      f"raw_read={r['raw_read_us']}us")
+            elif r["check"] == "bytes_moved":
+                print(f"resharding/bytes_moved/{r['op']},,"
+                      f"moved_fraction={r['moved_fraction']} "
+                      f"bytes={r['bytes_moved']} "
+                      f"minimal={r['minimal_bytes']} ratio={r['ratio']} "
+                      f"cutovers={r['cutovers']}")
+            elif r["check"] == "elastic_ycsb":
+                print(f"resharding/elastic_ycsb,,"
+                      f"shards={'->'.join(map(str, r['shards_path']))} "
+                      f"lost={r['lost_acked_writes']} "
+                      f"stale={r['stale_reads']} "
+                      f"straggler_rejections={r['straggler_rejections']} "
+                      f"dual_reads={r['dual_reads']} "
+                      f"max_ratio={r['max_ratio']}")
+            elif r["check"] == "serving_dip":
+                print(f"resharding/serving_dip,,"
+                      f"base={r['base_kops']}KOp/s "
+                      f"during={r['during_kops']}KOp/s "
+                      f"after={r['after_kops']}KOp/s "
+                      f"dip_ratio={r['dip_ratio']} "
+                      f"chains={r['migration_chains']}")
 
     if want("nvm_writes"):
         rows = bench_nvm_writes()

@@ -9,6 +9,8 @@ from repro.core.api import (ALL_SCHEMES, ALL_STORES, ErdaClusterStore,
 from repro.core.client import ErdaClient
 from repro.core.cluster import ErdaCluster, HashRing
 from repro.core.replication import InFlightWrite, ShardDownError, ShardGroup
+from repro.core.resharding import (MigrationLog, Resharding, RingGeneration,
+                                   moving_slices)
 from repro.core.server import DataLossError, ErdaServer, ServerConfig
 from repro.fabric.transport import StaleEpochError
 
@@ -23,9 +25,13 @@ __all__ = [
     "ErdaStore",
     "HashRing",
     "InFlightWrite",
+    "MigrationLog",
+    "Resharding",
+    "RingGeneration",
     "ServerConfig",
     "ShardDownError",
     "ShardGroup",
     "StaleEpochError",
     "make_store",
+    "moving_slices",
 ]

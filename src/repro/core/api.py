@@ -132,6 +132,30 @@ class ErdaClusterStore:
     def shard_for_key(self, key: int) -> int:
         return self.cluster.shard_for_key(key)
 
+    # ------------------------------------------------------ elastic membership
+    def add_shard(self, shard_id: Optional[int] = None, *, run: bool = True,
+                  grace: int = 1, batch: int = 32):
+        """Grow the live cluster by one shard (online resharding).  Returns
+        the ``Resharding`` controller; with ``run=False`` the caller drives
+        ``step(budget)`` interleaved with traffic."""
+        return self.cluster.add_shard(shard_id, run=run, grace=grace,
+                                      batch=batch)
+
+    def remove_shard(self, shard_id: int, *, run: bool = True,
+                     grace: int = 1, batch: int = 32):
+        """Shrink the live cluster by one shard (online resharding)."""
+        return self.cluster.remove_shard(shard_id, run=run, grace=grace,
+                                         batch=batch)
+
+    @property
+    def resharding(self):
+        """The in-flight ``Resharding`` controller, or None."""
+        return self.cluster.resharding
+
+    @property
+    def shard_ids(self) -> List[int]:
+        return self.cluster.shard_ids
+
     @property
     def n_shards(self) -> int:
         return self.cluster.n_shards

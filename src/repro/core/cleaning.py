@@ -28,7 +28,7 @@ exactly what the old slot is for).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core import layout
 from repro.core.log import Head, Region, RecordRef
@@ -36,6 +36,47 @@ from repro.core.log import Head, Region, RecordRef
 
 def _align8(n: int) -> int:
     return (n + 7) & ~7
+
+
+def live_resync_keys(server, key_filter: Optional[Callable[[int], bool]] = None
+                     ) -> Tuple[List[int], Dict[str, int]]:
+    """Migration-aware resync scan: the live keys of one server, with a
+    census of the garbage skipped.
+
+    Every resync path (replica heal, slice migration) should copy only the
+    LATEST live version of each key — never tombstoned keys, never
+    superseded record versions.  This reuses the cleaner's MERGE idiom: a
+    reverse scan of each head's record index where the first-encountered
+    (= latest) version per key wins, a latest-version tombstone drops the
+    key, and unindexed/superseded records are overlooked.  ``key_filter``
+    restricts the scan to a keyspace slice (online resharding migrates one
+    slice at a time).
+
+    Returns ``(keys, stats)`` where stats counts ``live``,
+    ``skipped_tombstones`` (latest version is a delete) and ``skipped_dead``
+    (superseded versions and table-evicted records) — the verb census that
+    proves garbage is neither read nor copied."""
+    stats = {"live": 0, "skipped_tombstones": 0, "skipped_dead": 0}
+    keys: List[int] = []
+    table = server.table
+    for head in server.log.heads.values():
+        seen: Set[int] = set()
+        for ref in reversed(head.index):
+            if key_filter is not None and not key_filter(ref.key):
+                continue
+            if ref.key in seen:
+                stats["skipped_dead"] += 1
+                continue
+            seen.add(ref.key)
+            if ref.deleted:
+                stats["skipped_tombstones"] += 1
+                continue
+            if table.lookup(ref.key) is None:
+                stats["skipped_dead"] += 1
+                continue
+            keys.append(ref.key)
+            stats["live"] += 1
+    return keys, stats
 
 
 def sweep_server(server, *, force: bool = False) -> int:

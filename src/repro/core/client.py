@@ -49,7 +49,7 @@ recovery.
 from __future__ import annotations
 
 import struct
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.core import layout
 from repro.core.hashtable import ENTRY_SIZE, H, STATE_VALID
@@ -139,6 +139,24 @@ class ErdaClient:
         reach-through, no extra verbs."""
         return bool(self._cleaning_heads) and \
             head_id_for_key(key, self.n_heads) in self._cleaning_heads
+
+    def purge_locations(self, keys: Optional[Sequence[int]] = None, *,
+                        pred: Optional[Callable[[int], bool]] = None) -> int:
+        """Surgical location-cache purge for an ownership change.  A slice
+        cutover (online resharding) moves one keyspace interval to a new
+        owner; only THOSE keys' cached words are invalid afterwards, so —
+        exactly like the per-head purge cleaning epochs do — the migrated
+        keys are dropped (by list or by predicate) and every other entry
+        keeps its one-doorbell warm-read path.  Returns the number of
+        entries purged."""
+        if pred is not None:
+            stale = [k for k in self.loc_cache if pred(k)]
+        else:
+            stale = [k for k in (keys or ()) if k in self.loc_cache]
+        for k in stale:
+            del self.loc_cache[k]
+        self.stats["spec_invalidations"] += len(stale)
+        return len(stale)
 
     # ------------------------------------------------------------- one-sided ops
     def _os_read(self, addr: int, nbytes: int, op: str = "erda.object") -> bytes:

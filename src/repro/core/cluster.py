@@ -10,7 +10,7 @@ Key routing uses a consistent-hash ring with virtual nodes: shard ``i`` owns
 ``vnodes`` pseudo-random points on the 64-bit ring; a key is served by the
 first point clockwise of ``hash(key)``.  Virtual nodes keep the load spread
 even, and growing the cluster by one shard relocates only ~1/(n+1) of the key
-space — the property that makes online resharding feasible later.
+space — the property online resharding rides.
 
 Availability (``replication>=2``): every ring slot is a ``ShardGroup`` — a
 primary replica plus ``replication-1`` backups placed on successive
@@ -24,6 +24,16 @@ QP-fenced epoch (a partitioned old primary's stale-epoch writes bounce);
 ``recover_shard(i)`` crash-restarts intact members and re-syncs fresh
 replicas for wiped/evicted slots.
 
+Elastic membership (online resharding): ``add_shard()`` / ``remove_shard()``
+change membership on a LIVE cluster.  The ring is versioned through a
+``RingGeneration`` — the old and new rings coexist while the moving keyspace
+slices migrate one at a time (epoch-fenced cutover, dual-read while in
+flight, MigrationLog-driven copy, grace-period cleanup of the source
+copies; see ``repro.core.resharding``).  Groups live in a ``ShardMap`` keyed
+by shard id, so ids stay stable (and may go sparse) across membership
+changes while pre-elastic call sites that iterate ``cluster.groups`` keep
+working.
+
 Cluster-wide coordination:
   * ``recover()``         — run the §4.2 crash-recovery scan on every shard
                             (or one shard via ``recover_shard``): shards
@@ -36,11 +46,12 @@ Cluster-wide coordination:
 from __future__ import annotations
 
 import bisect
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.client import ErdaClient
 from repro.core.hashtable import splitmix64
 from repro.core.replication import ShardDownError, ShardGroup
+from repro.core.resharding import RingGeneration, Resharding, key_hash
 from repro.core.server import ErdaServer, ServerConfig
 from repro.nvmsim.device import NVMDevice
 
@@ -55,7 +66,12 @@ class HashRing:
     by the explicit ``(hash, shard)`` pair, so an equal-hash tie breaks the
     same way on every rebuild regardless of shard insertion order, and a key
     whose hash lands exactly ON a point belongs to THAT point's shard
-    (``bisect_left``; first point clockwise, inclusive)."""
+    (``bisect_left``; first point clockwise, inclusive).
+
+    A shard's points depend only on its ID — membership changes leave every
+    surviving shard's points exactly where they were, which is what makes
+    add/remove minimal-movement (only the slices whose closest-point owner
+    changed move; see ``repro.core.resharding.moving_slices``)."""
 
     def __init__(self, n_shards: int, vnodes: int = 64,
                  shard_ids: Optional[Sequence[int]] = None):
@@ -66,6 +82,7 @@ class HashRing:
         ids = list(shard_ids) if shard_ids is not None else list(range(n_shards))
         if len(ids) != n_shards:
             raise ValueError("shard_ids must name every shard exactly once")
+        self.ids = sorted(ids)
         points = []
         for shard in ids:
             seed = splitmix64(shard + 1)
@@ -76,13 +93,31 @@ class HashRing:
         self._hashes = [h for h, _ in points]
         self._shards = [s for _, s in points]
 
-    def shard_for(self, key: int) -> int:
-        h = splitmix64(key ^ 0x5BD1E995)
+    # the key→ring-position hash lives in repro.core.resharding (shared with
+    # the slice machinery, so slice membership and routing can never disagree)
+    key_hash = staticmethod(key_hash)
+
+    def shard_for_hash(self, h: int) -> int:
         # bisect_left: a key hashing exactly onto a point is owned by it
         i = bisect.bisect_left(self._hashes, h)
         if i == len(self._hashes):
             i = 0  # wrap around the ring
         return self._shards[i]
+
+    def shard_for(self, key: int) -> int:
+        return self.shard_for_hash(key_hash(key))
+
+
+class ShardMap(Dict[int, ShardGroup]):
+    """shard_id → ShardGroup mapping that ITERATES ITS VALUES in shard-id
+    order.  Pre-elastic code was written against a ``List[ShardGroup]``
+    (``for g in cluster.groups``, ``enumerate(cluster.groups)``,
+    ``cluster.groups[shard]``); keying by shard id keeps those call sites
+    working after ``remove_shard`` makes the id space sparse.  Use
+    ``.keys()`` / ``.items()`` for the ids."""
+
+    def __iter__(self) -> Iterator[ShardGroup]:
+        return iter([self[k] for k in sorted(self.keys())])
 
 
 #: per-shard default — smaller than the single-server default since a cluster
@@ -98,29 +133,58 @@ class ErdaCluster:
             raise ValueError("replication must be >= 1")
         self.cfg = cfg = cfg or SHARD_CONFIG
         self.replication = replication
+        self.vnodes = vnodes
         self._transport_factory = transport_factory
-        self.ring = HashRing(n_shards, vnodes)
+        self.generation = RingGeneration(HashRing(n_shards, vnodes))
+        self.resharding: Optional[Resharding] = None
+        #: groups retired by remove_shard — kept so cumulative counters
+        #: (stale_rejected, epoch bumps) stay monotonic across scale-in
+        self.retired: List[ShardGroup] = []
         # each shard connection gets its own QP lane, so per-shard batches are
         # independently doorbell'd and their completions overlap across shards;
         # replica j of shard i rides lane j*n_shards + i and is placed on ring
         # host (i + j) % n_shards (successive ring successors)
-        self.groups: List[ShardGroup] = []
+        self.groups: ShardMap = ShardMap()
         for i in range(n_shards):
             replicas = [self._connect(ErdaServer(cfg), lane=j * n_shards + i)
                         for j in range(replication)]
             hosts = [None] + [(i + j) % n_shards
                               for j in range(1, replication)]
-            self.groups.append(ShardGroup(i, replicas[0],
-                                          backups=replicas[1:],
-                                          replica_hosts=hosts))
+            self.groups[i] = ShardGroup(i, replicas[0],
+                                        backups=replicas[1:],
+                                        replica_hosts=hosts)
+        # later lanes (healed joiners, elastic shards) allocate past the
+        # initial block so every connection keeps a unique QP
+        self._next_lane = replication * n_shards
 
     def _connect(self, server: ErdaServer, lane: int) -> ErdaClient:
         t = self._transport_factory(server.dev) if self._transport_factory else None
         return ErdaClient(server, client_id=lane, qp=lane, transport=t)
 
+    def _alloc_lane(self) -> int:
+        lane = self._next_lane
+        self._next_lane += 1
+        return lane
+
+    @property
+    def ring(self) -> HashRing:
+        """The CURRENT ring generation (the old ring while a migration is in
+        flight — per-slice routing overrides live in ``self.resharding``)."""
+        return self.generation.current
+
+    @property
+    def ring_version(self) -> int:
+        return self.generation.version
+
     @property
     def n_shards(self) -> int:
         return len(self.groups)
+
+    @property
+    def shard_ids(self) -> List[int]:
+        """Sorted live shard ids — contiguous ``0..n-1`` until a
+        ``remove_shard`` makes the space sparse."""
+        return sorted(self.groups.keys())
 
     @property
     def servers(self) -> List[ErdaServer]:
@@ -132,35 +196,74 @@ class ErdaCluster:
         """The CURRENT primary replica connection of every shard."""
         return [g.primary for g in self.groups]
 
+    def _ring_successor(self, shard: int) -> int:
+        ids = self.shard_ids
+        i = ids.index(shard)
+        return ids[(i + 1) % len(ids)]
+
     def shard_for_key(self, key: int) -> int:
+        if self.resharding is not None:
+            return self.resharding.route(key)[0]
         return self.ring.shard_for(key)
 
     def client_for_key(self, key: int) -> ErdaClient:
-        return self.groups[self.ring.shard_for(key)].primary
+        return self.groups[self.shard_for_key(key)].primary
 
     def group_for_key(self, key: int) -> ShardGroup:
-        return self.groups[self.ring.shard_for(key)]
+        return self.groups[self.shard_for_key(key)]
 
     # ------------------------------------------------------------------ kv ops
     def read(self, key: int) -> Optional[bytes]:
-        return self.group_for_key(key).read(key)
+        rs = self.resharding
+        if rs is not None:
+            shard, s = rs.route(key)
+            if s is not None:
+                return rs.read(key, s)  # dual-fetch: in-flight slice
+            return self.groups[shard].read(key)
+        return self.groups[self.ring.shard_for(key)].read(key)
 
     def write(self, key: int, value: bytes) -> None:
-        self.group_for_key(key).write(key, value)
+        rs = self.resharding
+        if rs is not None:
+            shard, s = rs.route(key)
+            if s is not None:
+                rs.write(key, value, s)  # new owner + MigrationLog "fresh"
+                return
+            self.groups[shard].write(key, value)
+            return
+        self.groups[self.ring.shard_for(key)].write(key, value)
 
     def delete(self, key: int) -> None:
-        self.group_for_key(key).delete(key)
+        rs = self.resharding
+        if rs is not None:
+            shard, s = rs.route(key)
+            if s is not None:
+                rs.delete(key, s)  # MigrationLog tombstone
+                return
+            self.groups[shard].delete(key)
+            return
+        self.groups[self.ring.shard_for(key)].delete(key)
 
     # ------------------------------------------------------------- batched ops
     def multi_read(self, keys: Sequence[int]) -> List[Optional[bytes]]:
         """Batched read across shards: keys group by owning shard, each shard
         client posts its sub-batch over its own QP (2 doorbells per shard, not
         2 round trips per key), and completions overlap across shards — the
-        DES layer replays per-shard traces concurrently."""
+        DES layer replays per-shard traces concurrently.  Keys in an
+        in-flight migration slice take the per-key dual-read path (rare: one
+        slice at a time)."""
+        rs = self.resharding
+        out: List[Optional[bytes]] = [None] * len(keys)
         by_shard: Dict[int, List[int]] = {}
         for i, key in enumerate(keys):
-            by_shard.setdefault(self.ring.shard_for(key), []).append(i)
-        out: List[Optional[bytes]] = [None] * len(keys)
+            if rs is not None:
+                shard, s = rs.route(key)
+                if s is not None:
+                    out[i] = rs.read(key, s)
+                    continue
+            else:
+                shard = self.ring.shard_for(key)
+            by_shard.setdefault(shard, []).append(i)
         for shard, idxs in by_shard.items():
             vals = self.groups[shard].multi_read([keys[i] for i in idxs])
             for i, v in zip(idxs, vals):
@@ -170,11 +273,91 @@ class ErdaCluster:
     def multi_write(self, items: Sequence[Tuple[int, bytes]]) -> None:
         """Batched write across shards: per-shard sub-batches, each 2
         doorbells (metadata flips, fence, data writes) on that shard's QP."""
+        rs = self.resharding
         by_shard: Dict[int, List[Tuple[int, bytes]]] = {}
         for key, value in items:
-            by_shard.setdefault(self.ring.shard_for(key), []).append((key, value))
+            if rs is not None:
+                shard, s = rs.route(key)
+                if s is not None:
+                    rs.write(key, value, s)
+                    continue
+            else:
+                shard = self.ring.shard_for(key)
+            by_shard.setdefault(shard, []).append((key, value))
         for shard, shard_items in by_shard.items():
             self.groups[shard].multi_write(shard_items)
+
+    # ------------------------------------------------------- elastic membership
+    def add_shard(self, shard_id: Optional[int] = None, *, run: bool = True,
+                  grace: int = 1, batch: int = 32) -> Resharding:
+        """Grow the live cluster by one shard.  The new ``ShardGroup`` (full
+        replication, fresh QP lanes) joins the membership immediately; a
+        ``Resharding`` migrates the ~1/(n+1) of the keyspace whose closest
+        ring point is now the new shard's, slice by slice, while every other
+        key keeps serving untouched.  ``run=True`` drains the migration
+        before returning; ``run=False`` returns the controller so a serving
+        loop can interleave ``step(budget)`` with client traffic."""
+        if self.resharding is not None:
+            raise RuntimeError("a resharding is already in progress")
+        new_id = max(self.groups.keys()) + 1 if shard_id is None else shard_id
+        if new_id in self.groups:
+            raise ValueError(f"shard {new_id} already exists")
+        ids = sorted([*self.groups.keys(), new_id])
+        replicas = [self._connect(ErdaServer(self.cfg), lane=self._alloc_lane())
+                    for _ in range(self.replication)]
+        pos = ids.index(new_id)
+        hosts = [None] + [ids[(pos + j) % len(ids)]
+                          for j in range(1, self.replication)]
+        self.groups[new_id] = ShardGroup(new_id, replicas[0],
+                                         backups=replicas[1:],
+                                         replica_hosts=hosts)
+        return self._begin_resharding(ids, adding=new_id, run=run,
+                                      grace=grace, batch=batch)
+
+    def remove_shard(self, shard_id: int, *, run: bool = True,
+                     grace: int = 1, batch: int = 32) -> Resharding:
+        """Shrink the live cluster by one shard.  The leaving shard keeps
+        serving its keyspace while each of its slices cuts over and drains to
+        the slice's new owner; once the migration completes the group retires
+        (its cumulative counters fold into the cluster's)."""
+        if self.resharding is not None:
+            raise RuntimeError("a resharding is already in progress")
+        if shard_id not in self.groups:
+            raise ValueError(f"no such shard: {shard_id}")
+        if len(self.groups) < 2:
+            raise ValueError("cannot remove the last shard")
+        if self.groups[shard_id].primary_down:
+            raise ShardDownError(shard_id, "recover before removing")
+        ids = sorted(i for i in self.groups.keys() if i != shard_id)
+        return self._begin_resharding(ids, removing=shard_id, run=run,
+                                      grace=grace, batch=batch)
+
+    def _begin_resharding(self, ids: List[int], *, adding: Optional[int] = None,
+                          removing: Optional[int] = None, run: bool,
+                          grace: int, batch: int) -> Resharding:
+        self.generation.begin(HashRing(len(ids), self.vnodes, shard_ids=ids))
+        rs = Resharding(self, self.generation, adding=adding,
+                        removing=removing, grace=grace, batch=batch)
+        self.resharding = rs
+        if run:
+            rs.run_to_completion()
+        return rs
+
+    def _finish_resharding(self, rs: Resharding) -> None:
+        """Called by ``Resharding`` once every slice is done and cleaned:
+        swing the ring generation and retire a removed shard."""
+        self.generation.commit()
+        self.resharding = None
+        if rs.removing is not None:
+            g = self.groups.pop(rs.removing)
+            self.retired.append(g)
+            # host labels that pointed at the retired shard remap to its ring
+            # successor (they are DES port placements, not data placement)
+            for g2 in self.groups:
+                g2.replica_hosts = [
+                    None if h is None else
+                    (h if h in self.groups else self._ring_successor(g2.shard_id))
+                    for h in g2.replica_hosts]
 
     # ---------------------------------------------------------------- failover
     def fail_shard(self, shard: int, replica: int = 0, *,
@@ -235,17 +418,22 @@ class ErdaCluster:
                 g.replicas[i].set_epoch(g.epoch)
         if self.replication > 1:
             def joiner_factory(slot: int) -> ErdaClient:
-                return self._connect(ErdaServer(self.cfg),
-                                     lane=slot * self.n_shards + shard)
+                # reuse the evicted slot's QP lane when one exists (traces
+                # line up across a heal); fresh slots get a fresh lane
+                if slot < len(g.replicas):
+                    lane = g.replicas[slot].qp
+                else:
+                    lane = self._alloc_lane()
+                return self._connect(ErdaServer(self.cfg), lane=lane)
             for k, v in g.heal(joiner_factory).items():
                 stats[k] = stats.get(k, 0) + v
-            g.backup_host = (shard + 1) % self.n_shards
+            g.backup_host = self._ring_successor(shard)
         return stats
 
     def recover(self) -> Dict[str, int]:
         """Cluster-wide recovery sweep (e.g. after full-site power loss)."""
         total: Dict[str, int] = {"shards": 0}
-        for shard in range(self.n_shards):
+        for shard in self.shard_ids:
             for k, v in self.recover_shard(shard).items():
                 total[k] = total.get(k, 0) + v
             total["shards"] += 1
@@ -287,19 +475,24 @@ class ErdaCluster:
 
     @property
     def epoch_bumps(self) -> int:
-        """Total promotions-driven epoch bumps across all groups."""
-        return sum(g.epoch for g in self.groups)
+        """Total epoch bumps across all groups — failover promotions plus
+        resharding slice cutovers (including retired groups)."""
+        return sum(g.epoch for g in self.groups) + \
+            sum(g.epoch for g in self.retired)
 
     @property
     def degraded_reads(self) -> int:
         """Keys served through quorum reads while a primary was down."""
-        return sum(g.degraded_reads for g in self.groups)
+        return sum(g.degraded_reads for g in self.groups) + \
+            sum(g.degraded_reads for g in self.retired)
 
     @property
     def stale_rejected(self) -> int:
         """Stale-epoch WQEs bounced at any replica's QP (split-brain writes
-        fenced after a promotion)."""
-        return sum(g.stale_rejected for g in self.groups)
+        fenced after a promotion, or straggler writes fenced by a slice
+        cutover)."""
+        return sum(g.stale_rejected for g in self.groups) + \
+            sum(g.stale_rejected for g in self.retired)
 
     def keys_per_shard(self) -> List[int]:
         return [s.table.n_items for s in self.servers]

@@ -71,6 +71,7 @@ from contextlib import ExitStack
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import layout
+from repro.core.cleaning import live_resync_keys
 from repro.core.client import ErdaClient
 from repro.fabric.transport import StaleEpochError
 
@@ -301,6 +302,23 @@ class ShardGroup:
         self.promotions += 1
         return old
 
+    def bump_epoch(self) -> int:
+        """Fence the current generation WITHOUT a membership change — the
+        slice-cutover primitive of online resharding.  The epoch bumps, every
+        live member adopts it and revokes the old epoch's write grant at its
+        QP, so an in-flight write posted before the cutover bounces
+        (``StaleEpochError``) when its doorbell finally rings, while writes
+        issued after the bump carry the new epoch and pass.  Unlike
+        ``promote()`` there is no §4.2 sweep and no reconnect: the membership
+        and the data are untouched, only the write generation moves."""
+        self.epoch += 1
+        for r, is_down in zip(self.replicas, self.down):
+            if is_down:
+                continue
+            r.set_epoch(self.epoch)
+            r.transport.revoke_epochs_below(self.epoch)
+        return self.epoch
+
     # ---------------------------------------------------------------- repair
     def heal(self, joiner_factory: Callable[[int], ErdaClient]) -> Dict[str, int]:
         """Repair every failed member.  Intact (un-wiped) down members
@@ -361,9 +379,13 @@ class ShardGroup:
                      batch: int = RESYNC_BATCH) -> int:
         """Stream every live object of the primary into an (empty) joiner —
         batched one-sided reads from the primary, batched writes into the
-        joiner.  Tombstones are skipped: missing = deleted on a fresh
-        replica."""
-        keys = [e.key for e in self.primary.server.table.iter_valid()]
+        joiner.  The key list comes from the migration-aware resync scan
+        (``live_resync_keys``): tombstoned keys and dead record versions are
+        skipped BEFORE any verb is posted, so resync never spends one-sided
+        reads fetching garbage it would only throw away (missing = deleted on
+        a fresh replica)."""
+        keys, scan = live_resync_keys(self.primary.server)
+        self.last_resync_scan = scan
         n = 0
         for i in range(0, len(keys), batch):
             chunk = keys[i:i + batch]

@@ -131,11 +131,16 @@ class QPServiceEstimator:
         self.min_s = min(self.min_s, gap_s)
         self.max_s = max(self.max_s, gap_s)
 
-    def estimate_completion_s(self, now_s: float, units_ahead: int) -> float:
+    def estimate_completion_s(self, now_s: float, units_ahead: int,
+                              floor_s: Optional[float] = None) -> float:
         """Estimated completion time of a request with ``units_ahead``
         dispatched-but-incomplete units in front of it on this QP: drain the
-        pipeline at the observed rate, then one uncontended service."""
-        return now_s + units_ahead * self.per_unit_s + self.floor_s
+        pipeline at the observed rate, then one uncontended service.
+        ``floor_s`` overrides the seeded latency floor per call — an op kind
+        with a different verb pipeline (a replicated write vs a read) has a
+        different uncontended floor on the same QP."""
+        return now_s + units_ahead * self.per_unit_s \
+            + (self.floor_s if floor_s is None else floor_s)
 
     def stats(self) -> dict:
         return {"per_unit_us": round(self.per_unit_s * 1e6, 3),

@@ -69,7 +69,7 @@ import numpy as np
 from repro.netsim.contention import (OpHandle, QPServiceEstimator, ServerPort,
                                      qp_stats_summary, replay_doorbells,
                                      trace_nic_occupancy_s)
-from repro.netsim.pricing import SimParams, trace_completion_s
+from repro.netsim.pricing import DoorbellTrace, SimParams, trace_completion_s
 from repro.netsim.sim import FifoLock, Simulator, run_process
 from repro.workloads.metrics import (LatencyRecorder, histogram_summary,
                                      latency_summary_us)
@@ -81,8 +81,15 @@ from repro.workloads.ycsb import ZipfianGenerator
 #: rides that lane's QP and host port)
 Lanes = List[Tuple[int, list]]
 
-#: {"read"|"write": {batch_size: Lanes}} — captured off the real store code
+#: {"read"|"write": {batch_size: Lanes}} — captured off the real store code.
+#: An optional "meta" key carries capture-time facts about the traced store
+#: ({"replication": r, "mirror_wqes": {batch_size: n}}) — the dispatcher uses
+#: it for mirror-leg accounting; schedulers must ignore unknown keys when
+#: selecting op kinds.
 TraceTable = Dict[str, Dict[int, Lanes]]
+
+#: the TraceTable keys that are dispatchable op kinds (anything else is meta)
+TRACE_KINDS = ("read", "write")
 
 
 @dataclasses.dataclass
@@ -151,9 +158,8 @@ class QPScheduler:
         self.qps = qps
         self.recorder = recorder
         self.out = out  # shared run-level accumulators
+        self.p = p
         self.log_idx = streams[0].idx if len(streams) == 1 else -1
-        self.sizes = {kind: sorted(by_b) for kind, by_b in traces.items()}
-        self.b_max = min(cfg.b_max, max(max(s) for s in self.sizes.values()))
         # posted_depth is per SCHEDULER, deliberately NOT scaled by the
         # number of streams sharing the QP: a deep shared pipeline would let
         # every arrival dispatch eagerly as a singleton, moving all queueing
@@ -165,21 +171,51 @@ class QPScheduler:
         self.in_flight = 0           # dispatched-but-incomplete batches
         self.outstanding_ops = 0     # requests inside those batches
         self.target = 1.0            # adaptive batch target (EMA of run lengths)
-        kind0 = "read" if "read" in self.sizes else next(iter(self.sizes))
-        b0 = min(self.sizes[kind0])
-        # rate seed: per-batch occupancy of the busiest NIC lane (the
-        # serialized resource that bounds drain); latency floor: one op's
-        # uncontended completion — both closed-form, so estimates are
-        # deterministic from the very first arrival
-        seed_s = max(trace_nic_occupancy_s(tr, p)
-                     for _, tr in traces[kind0][b0])
-        floor_s = max(trace_completion_s(p, tr) for _, tr in traces[kind0][b0])
-        self.service = QPServiceEstimator(seed_s, floor_s)
+        self.service: Optional[QPServiceEstimator] = None
+        self.set_traces(traces)
         self.batch_hist: Dict[int, int] = {}
         self.head_waits: List[float] = []  # dispatch_t - oldest head arrival
         self.handles: List[OpHandle] = []
         self._armed_deadline: Optional[float] = None
         self._last_done_t = 0.0  # drain reference for the service estimator
+
+    # --------------------------------------------------------- trace tables
+    def set_traces(self, traces: TraceTable) -> None:
+        """Install (or swap, mid-run) the captured trace table this scheduler
+        replays from.  Online resharding changes the lane layout under a live
+        serving run — a grown cluster fans a multi-op over more lanes, a
+        shrunk one over fewer — so ``run_open_loop(..., lane_events=...)``
+        calls this at the cutover instants.  Batch-size menus, the adaptive
+        ``b_max``, the per-kind latency floors, and the mirror-leg meta all
+        refresh; the service-rate EMA is kept (first install seeds it from
+        the closed-form uncontended pricing) because the QP's drain rate is a
+        property of the fabric, which a membership change shifts only
+        gradually as the new lane mix takes effect."""
+        self.traces = traces
+        self.sizes = {kind: sorted(by_b) for kind, by_b in traces.items()
+                      if kind in TRACE_KINDS}
+        self.b_max = min(self.cfg.b_max,
+                         max(max(s) for s in self.sizes.values()))
+        self.meta = traces.get("meta", {})
+        self.mirror_wqes: Dict[int, int] = self.meta.get("mirror_wqes", {})
+        # per-kind latency floor: one op's uncontended completion for THAT
+        # kind's verb pipeline — a replicated write's floor (mirror legs +
+        # flip) is well above a read's (two dependent fetches), and shedding
+        # a write against the read floor would admit infeasible writes
+        self.kind_floor = {
+            kind: max(trace_completion_s(self.p, tr)
+                      for _, tr in traces[kind][min(self.sizes[kind])])
+            for kind in self.sizes}
+        if self.service is None:
+            # rate seed: per-batch occupancy of the busiest NIC lane (the
+            # serialized resource that bounds drain); latency floor: one op's
+            # uncontended completion — both closed-form, so estimates are
+            # deterministic from the very first arrival
+            kind0 = "read" if "read" in self.sizes else next(iter(self.sizes))
+            b0 = min(self.sizes[kind0])
+            seed_s = max(trace_nic_occupancy_s(tr, self.p)
+                         for _, tr in traces[kind0][b0])
+            self.service = QPServiceEstimator(seed_s, self.kind_floor[kind0])
 
     # ------------------------------------------------------------- arrivals
     def start(self) -> None:
@@ -252,12 +288,18 @@ class QPScheduler:
                 return
             s = busy[0]
             t0, kind, _key, _seq = s.queue[0]
-            est = self.service.estimate_completion_s(self.sim.now,
-                                                     self.in_flight)
+            # the floor is per KIND: a replicated write pays its mirror legs
+            # in the uncontended pipeline too, so an infeasible write is
+            # recognized — and shed — BEFORE any of its mirror-lane WQEs are
+            # posted, not after the primary leg has already burned NIC time
+            est = self.service.estimate_completion_s(
+                self.sim.now, self.in_flight,
+                floor_s=self.kind_floor.get(kind))
             if est <= t0 + slo:
                 return
             s.queue.popleft()
             self.out["shed"] += 1
+            self.out[f"shed_{kind}s"] = self.out.get(f"shed_{kind}s", 0) + 1
             self._log(s.idx, "shed", kind, len(s.queue))
 
     def _kick(self) -> None:
@@ -318,6 +360,12 @@ class QPScheduler:
         self.outstanding_ops += b
         self.out["batch_hist"][b] = self.out["batch_hist"].get(b, 0) + 1
         self.batch_hist[b] = self.batch_hist.get(b, 0) + 1
+        if kind == "write":
+            # mirror-leg WQE census: every dispatched write batch posts the
+            # mirror WQEs its captured trace carries — a shed write posts
+            # none, which is what the admission="slo" regression asserts
+            self.out["write_dispatches"] += 1
+            self.out["mirror_wqes"] += self.mirror_wqes.get(b, 0)
         self.head_waits.append(self.sim.now - head_t)
         if self.cfg.collect_schedule:
             self.out["schedule"].append((kind, [k for _, _, k, _, _ in batch]))
@@ -388,24 +436,49 @@ def poisson_arrivals(cfg: OpenLoopConfig, client: int) -> List[Tuple[float, str,
             for t, r, k in zip(times, kinds, keys)]
 
 
+def _table_lane_ids(table: TraceTable) -> set:
+    return {lane for kind, by_b in table.items() if kind in TRACE_KINDS
+            for lanes in by_b.values() for lane, _ in lanes}
+
+
 def run_open_loop(traces: TraceTable, cfg: OpenLoopConfig,
-                  p: Optional[SimParams] = None) -> dict:
+                  p: Optional[SimParams] = None,
+                  lane_events: Optional[List[Tuple[float, TraceTable]]] = None,
+                  background: Optional[List[Tuple[float, int, list]]] = None
+                  ) -> dict:
     """Run one open-loop point: offered load → throughput (and goodput when
     an SLO is set), p50/p95/p99 (per op type), drops/sheds, per-QP
     queue-depth / HoL-blocking stats, per-QP-group batch-size histograms and
     head-of-line wait percentiles, NIC/CPU/NVM utilization, and
-    completion-vs-durability lag."""
+    completion-vs-durability lag.
+
+    ``lane_events`` models online resharding under a live serving run: a list
+    of ``(t_s, TraceTable)`` — at each instant every scheduler swaps to the
+    new table (``QPScheduler.set_traces``), gaining or dropping lanes
+    mid-run.  Ports and shared QPs are pre-built for the UNION of lane ids
+    across all tables, so a lane that appears at a cutover rides fabric
+    resources that existed (idle) from t=0 — deterministic event ordering is
+    preserved.  ``background`` injects migration traffic: ``(t_s, port_idx,
+    doorbell_trace)`` chains replayed on a per-port background QP, so
+    resync/copy bytes contend with foreground serving on the NICs they
+    actually cross."""
     if cfg.admission not in ("queue", "slo"):
         raise ValueError(f"unknown admission policy {cfg.admission!r}")
     if cfg.admission == "slo" and cfg.slo_s is None:
         raise ValueError("admission='slo' needs slo_s (the deadline)")
     p = p or SimParams()
     sim = Simulator()
-    lane_ids = sorted({lane for by_b in traces.values()
-                       for lanes in by_b.values() for lane, _ in lanes})
-    ports = [ServerPort(sim, p, f"srv{j}") for j in range(1 + max(lane_ids))]
+    all_lane_ids = set(_table_lane_ids(traces))
+    for _, table in (lane_events or ()):
+        all_lane_ids |= _table_lane_ids(table)
+    lane_ids = sorted(all_lane_ids)
+    max_port = max(lane_ids)
+    if background:
+        max_port = max(max_port, max(pi for _, pi, _ in background))
+    ports = [ServerPort(sim, p, f"srv{j}") for j in range(1 + max_port)]
     recorder = LatencyRecorder()
     out = {"completed": 0, "dropped": 0, "shed": 0, "in_slo": 0,
+           "write_dispatches": 0, "mirror_wqes": 0,
            "batch_hist": {}, "event_trace": [], "schedule": [],
            "schedule_detail": []}
     streams = [_Stream(i, poisson_arrivals(cfg, i))
@@ -420,6 +493,21 @@ def run_open_loop(traces: TraceTable, cfg: OpenLoopConfig,
                                for lane in lane_ids},
                               recorder, out, p)
                   for s in streams]
+    for t_s, table in (lane_events or ()):
+        def swap(table=table):
+            for sch in scheds:
+                sch.set_traces(table)
+                sch._kick()
+        sim.at(t_s, swap)
+    bg_done = [0]
+    if background:
+        bg_qps = {pi: FifoLock(sim, f"bg.qp{pi}")
+                  for pi in sorted({pi for _, pi, _ in background})}
+        for t_s, pi, tr in background:
+            def inject(pi=pi, tr=tr):
+                run_process(sim, replay_doorbells(tr, bg_qps[pi], ports[pi]),
+                            lambda: bg_done.__setitem__(0, bg_done[0] + 1))
+            sim.at(t_s, inject)
     offered = sum(len(s.arrivals) for s in streams)
     for sch in scheds:
         sch.start()
@@ -445,6 +533,13 @@ def run_open_loop(traces: TraceTable, cfg: OpenLoopConfig,
         "dropped": out["dropped"],
         "drop_rate": round(out["dropped"] / max(offered, 1), 4),
         "shed": out["shed"],
+        "shed_by_kind": {"read": out.get("shed_reads", 0),
+                         "write": out.get("shed_writes", 0)},
+        "write_dispatches": out["write_dispatches"],
+        "mirror_wqes": out["mirror_wqes"],
+        "lane_events": len(lane_events or ()),
+        "background_chains": {"injected": len(background or ()),
+                              "completed": bg_done[0]},
         "latency": recorder.summary(),
         "dispatches": dispatches,
         "mean_batch": round(out["completed"] / max(dispatches, 1), 2),
@@ -595,12 +690,18 @@ def capture_page_fetch_traces(n_shards: int = 2, vsize: int = 1024,
     store = make_store("erda-cluster", n_shards=n_shards, cfg=cfg,
                        transport_factory=lambda dev: SimTransport(dev, p),
                        replication=replication)
-    lanes = []  # (host port index, transport) per replica lane
-    for i, g in enumerate(store.cluster.groups):
+    # shard ids need not be contiguous after elastic membership changes, so
+    # ports are indexed by POSITION in the sorted id list, and a mirror
+    # host's id is mapped through the same table
+    pos = {sid: i for i, sid in enumerate(store.shard_ids)}
+    lanes = []  # (host port index, transport, is_mirror) per replica lane
+    for sid in store.shard_ids:
+        g = store.cluster.groups[sid]
         for j, c in enumerate(g.replicas):
-            port = i if j == 0 else g.replica_hosts[j]
-            lanes.append((port, c.transport))
+            port = pos[sid] if j == 0 else pos[g.replica_hosts[j]]
+            lanes.append((port, c.transport, j > 0))
     table: TraceTable = {"read": {}, "write": {}}
+    mirror_wqes: Dict[int, int] = {}
     for b in batches:
         keys = list(range(1, b + 1))
         items = [(k, bytes([k % 251]) * vsize) for k in keys]
@@ -612,17 +713,64 @@ def capture_page_fetch_traces(n_shards: int = 2, vsize: int = 1024,
         for g in store.cluster.groups:
             for c in g.replicas:
                 c.loc_cache.clear()
-        for _, t in lanes:
+        for _, t, _m in lanes:
             t.take_steps()
             t.take_doorbells()
         got = store.multi_read(keys)
         if got != [v for _, v in items]:  # must check even under -O
             raise RuntimeError("page-trace capture returned wrong values")
-        table["read"][b] = [(s, tr) for s, t in lanes
+        table["read"][b] = [(s, tr) for s, t, _m in lanes
                             if (tr := t.take_doorbells())]
         store.multi_write(items)
-        table["write"][b] = [(s, tr) for s, t in lanes
-                             if (tr := t.take_doorbells())]
-        for _, t in lanes:
+        mirror_wqes[b] = 0
+        wlanes = []
+        for s, t, m in lanes:
+            tr = t.take_doorbells()
+            if tr:
+                wlanes.append((s, tr))
+                if m:
+                    mirror_wqes[b] += sum(len(ev.wrs) for ev in tr
+                                          if isinstance(ev, DoorbellTrace))
+        table["write"][b] = wlanes
+        for _, t, _m in lanes:
             t.take_steps()
+    table["meta"] = {"replication": replication, "mirror_wqes": mirror_wqes}
     return table
+
+
+def capture_migration_traces(n_shards: int = 4, n_keys: int = 96,
+                             vsize: int = 1024,
+                             p: Optional[SimParams] = None
+                             ) -> List[Tuple[int, list]]:
+    """Capture the doorbell chains a REAL online ``add_shard`` migration
+    issues: load ``n_keys`` pages into a Sim-backed cluster, drain the
+    capture buffers, run the resharding to completion, and collect every
+    client lane's migration chain tagged with the host port (position in the
+    final sorted shard-id list) it lands on.
+
+    The serving driver injects these via ``run_open_loop(background=...)``
+    so resync/copy bytes contend with foreground page fetches on the NICs
+    they actually cross — that contention is the bounded throughput dip the
+    resharding figure measures."""
+    from repro.core import ServerConfig, make_store
+    from repro.fabric.sim import SimTransport
+    p = p or SimParams()
+    cfg = ServerConfig(device_size=8 << 20, table_capacity=1 << 10,
+                       n_heads=1, region_size=1 << 20, segment_size=64 << 10)
+    store = make_store("erda-cluster", n_shards=n_shards, cfg=cfg,
+                       transport_factory=lambda dev: SimTransport(dev, p))
+    store.multi_write([(k, bytes([k % 251]) * vsize)
+                       for k in range(1, n_keys + 1)])
+    for g in store.cluster.groups:
+        for c in g.replicas:
+            c.transport.take_steps()
+            c.transport.take_doorbells()
+    store.add_shard()
+    pos = {sid: i for i, sid in enumerate(store.shard_ids)}
+    chains = []
+    for sid in store.shard_ids:
+        for c in store.cluster.groups[sid].replicas:
+            c.transport.take_steps()
+            if (tr := c.transport.take_doorbells()):
+                chains.append((pos[sid], tr))
+    return chains

@@ -74,9 +74,17 @@ def _sim_lanes(store) -> List[Tuple[int, object]]:
     contended replay needs ``take_doorbells``)."""
     cluster = getattr(store, "cluster", None)
     if cluster is not None:
-        lanes = [(i if j == 0 else g.replica_hosts[j], c.transport)
-                 for i, g in enumerate(cluster.groups)
-                 for j, c in enumerate(g.replicas)]
+        # shard ids need not be contiguous after elastic membership changes:
+        # ports are indexed by position in the sorted id list, and a mirror
+        # host's id goes through the same mapping
+        ids = sorted(cluster.groups.keys())
+        pos = {sid: i for i, sid in enumerate(ids)}
+        lanes = []
+        for sid in ids:
+            g = cluster.groups[sid]
+            for j, c in enumerate(g.replicas):
+                lanes.append((pos[sid] if j == 0 else pos[g.replica_hosts[j]],
+                              c.transport))
     else:
         t = getattr(store, "transport", None)
         if t is None:
@@ -325,7 +333,7 @@ def run_failover_workload(store, workload: str, n_ops: int, n_keys: int,
     # quorum reads can mask a down primary for the whole remaining stream
     # (a read-heavy workload may never hit it with a write): restore full
     # service before the sweep, like an operator would
-    for sh in range(store.n_shards):
+    for sh in getattr(store, "shard_ids", range(store.n_shards)):
         if store.group(sh).primary_down:
             store.failover(sh)
             failovers += 1
@@ -487,7 +495,7 @@ def run_chaos_workload(store, workload: str = "ycsb_a", n_ops: int = 400,
         else:
             n_writes += 1
     # return to full strength, then verify EVERY acked write one last time
-    for sh in range(store.n_shards):
+    for sh in getattr(store, "shard_ids", range(store.n_shards)):
         g = store.group(sh)
         if g.primary_down or g.live_count < len(g.replicas) or \
                 len(g.replicas) < cluster.replication:
@@ -510,4 +518,165 @@ def run_chaos_workload(store, workload: str = "ycsb_a", n_ops: int = 400,
             **counters,
             "spec_hits": stats.get("spec_hits", 0),
             "spec_misses": stats.get("spec_misses", 0),
+            "store_stats": stats}
+
+
+# ------------------------------------------- elastic scale-out/in under load
+def run_elastic_workload(store, workload: str = "ycsb_a", n_ops: int = 600,
+                         n_keys: int = 120, value_size: int = 64,
+                         seed: int = 0, step_budget: int = 8,
+                         delete_every: int = 13, grace: int = 1) -> dict:
+    """THE online-resharding acceptance scenario: drive a replicated cluster
+    store with a YCSB op stream while the cluster scales OUT twice and IN
+    three times mid-stream (e.g. 4 → 6 → 3 shards), every migration
+    interleaved with live traffic.
+
+    Each membership change starts with ``run=False`` and the driver calls
+    ``Resharding.step(step_budget)`` after every client op, so reads hit the
+    dual-fetch path on in-flight slices, writes land on new owners behind
+    per-slice epoch-fenced cutovers, and deletes (every ``delete_every``-th
+    write becomes one) plant tombstones that migration must NOT resurrect.
+
+    The first scale-out also injects a straggler: a partitioned write is
+    started against a migrating slice's OLD owner before the cutover, and
+    its data-leg doorbells ring only after ``bump_epoch`` fenced the group —
+    every leg must be REJECTED (split-brain safety at the resharding
+    boundary), after which the driver retries through the new owner.
+
+    Every read is checked against the dict model of ACKNOWLEDGED writes and
+    a final sweep re-verifies all keys (including that deleted keys stay
+    deleted) after the last migration drains — so a returned report always
+    carries ``lost_acked_writes == 0`` and ``stale_reads == 0``; any
+    violation raised instead.  Per-event bytes-moved is compared against the
+    minimal keyspace fraction (the CI criterion asserts the ratio ≤ 1.5)."""
+    cluster = store.cluster
+    if cluster.replication < 2:
+        raise ValueError("run_elastic_workload needs a replicated cluster "
+                         "(the straggler injection rides a write quorum)")
+    ops = make_ops(workload, n_ops, n_keys, seed)
+    rng = np.random.default_rng(seed + 2)
+    model = {}
+    for k in range(n_keys):  # load phase (keys 1-based; 0 is the empty slot)
+        v = rng.bytes(value_size)
+        store.write(k + 1, v)
+        model[k + 1] = v
+    deleted: set = set()
+    # membership plan: two scale-outs early, three scale-ins later — the
+    # cluster ends SMALLER than it started, so shrink is exercised on shards
+    # that were themselves added mid-run
+    events = {n_ops * 1 // 8: "add", n_ops * 2 // 8: "add",
+              n_ops * 4 // 8: "remove", n_ops * 5 // 8: "remove",
+              n_ops * 6 // 8: "remove"}
+    shards_path = [store.n_shards]
+    migrations: List[dict] = []
+    straggler_rejections = 0
+    first_add = True
+    n_reads = n_writes = n_deletes = dual_reads = 0
+
+    def _finish_active() -> None:
+        rs = store.resharding
+        if rs is not None:
+            rs.run_to_completion()
+            _harvest(rs)
+
+    def _harvest(rs) -> None:
+        nonlocal dual_reads
+        rep = rs.report()
+        minimal = rep["moved_fraction"] * len(model) * value_size
+        migrations[-1].update(
+            moved_fraction=round(rep["moved_fraction"], 4),
+            bytes_moved=rep["bytes_moved"], keys_copied=rep["keys_copied"],
+            cutovers=rep["cutovers"], dual_reads=rep["dual_reads"],
+            tombstones=rep["tombstones"],
+            cleanup_removed=rep["cleanup_removed"],
+            minimal_bytes=round(minimal, 1),
+            ratio=round(rep["bytes_moved"] / minimal, 3) if minimal else 0.0)
+        dual_reads += rep["dual_reads"]
+        shards_path.append(store.n_shards)
+
+    def _begin(op: str) -> None:
+        nonlocal straggler_rejections, first_add
+        _finish_active()  # one migration at a time
+        if op == "add":
+            rs = store.add_shard(run=False, grace=grace)
+            migrations.append({"op": "add", "shard": rs.adding})
+            if first_add:
+                first_add = False
+                straggler_rejections += _inject_straggler(rs)
+        else:
+            victim = min(store.shard_ids)
+            rs = store.remove_shard(victim, run=False, grace=grace)
+            migrations.append({"op": "remove", "shard": victim})
+
+    def _inject_straggler(rs) -> int:
+        """Pre-cutover partitioned write against the first slice's OLD
+        owner; ring its data legs after the cutover fenced the epoch."""
+        s0 = rs.slices[0]
+        k = n_keys + 1
+        while not s0.contains_key(k):
+            k += 1
+        g = store.group(s0.src)
+        w = g.begin_partitioned_write(k, rng.bytes(value_size))
+        rs.step(step_budget)  # performs the slice-0 cutover (bump_epoch)
+        outcomes = w.ring()   # stale-epoch WQEs finally reach the NICs
+        if w.acked:
+            raise RuntimeError(
+                f"straggler write acked across a resharding cutover "
+                f"({outcomes})")
+        # un-acked → not in the model; retry through the (new) owner
+        v = rng.bytes(value_size)
+        store.write(k, v)
+        model[k] = v
+        return outcomes.count("rejected")
+
+    for i, (op, key) in enumerate(ops):
+        if i in events:
+            _begin(events[i])
+        key += 1
+        if op == "read":
+            n_reads += 1
+            got = store.read(key)
+            if got != model.get(key):  # must check even under -O
+                raise RuntimeError(f"stale read on key {key}")
+        elif model.get(key) is not None and n_writes % delete_every == delete_every - 1:
+            n_deletes += 1
+            n_writes += 1
+            store.delete(key)
+            del model[key]
+            deleted.add(key)
+        else:
+            n_writes += 1
+            v = rng.bytes(value_size)
+            store.write(key, v)
+            model[key] = v
+            deleted.discard(key)
+        rs = store.resharding
+        if rs is not None:
+            rs.step(step_budget)
+            if rs.done:
+                _harvest(rs)
+    _finish_active()
+    # final sweep: every acked write survives every migration, and deleted
+    # keys stay deleted (migration resurrected nothing)
+    for k, v in model.items():
+        if store.read(k) != v:
+            raise RuntimeError(f"lost acked write on key {k}")
+    for k in deleted:
+        if k not in model and store.read(k) is not None:
+            raise RuntimeError(f"deleted key {k} resurrected by migration")
+    stats = dict(store.stats)
+    return {"workload": workload, "n_ops": len(ops), "n_keys": n_keys,
+            "reads": n_reads, "writes": n_writes, "deletes": n_deletes,
+            "shards_path": shards_path, "migrations": migrations,
+            # the acceptance pair: any violation raised instead, so a
+            # returned report always carries zeros — CI asserts them
+            "lost_acked_writes": 0, "stale_reads": 0,
+            "dual_reads": dual_reads,
+            "bytes_moved": sum(m["bytes_moved"] for m in migrations),
+            "minimal_bytes": round(sum(m["minimal_bytes"]
+                                       for m in migrations), 1),
+            "max_ratio": max(m["ratio"] for m in migrations),
+            "straggler_rejections": straggler_rejections,
+            "stale_rejected": cluster.stale_rejected,
+            "spec_invalidations": stats.get("spec_invalidations", 0),
             "store_stats": stats}

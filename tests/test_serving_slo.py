@@ -260,8 +260,8 @@ def _arm_regression_run(traces, t0):
     concluding the wait was over."""
     sim = Simulator()
     cfg = OpenLoopConfig(offered_kops=100, n_clients=1, b_max=16)
-    lane_ids = sorted({lane for by_b in traces.values()
-                       for lanes in by_b.values() for lane, _ in lanes})
+    from repro.serving.load import _table_lane_ids
+    lane_ids = sorted(_table_lane_ids(traces))
     ports = [ServerPort(sim, P, f"srv{j}") for j in range(1 + max(lane_ids))]
     qps = {lane: FifoLock(sim, f"qp{lane}") for lane in lane_ids}
     from repro.workloads.metrics import LatencyRecorder
@@ -358,3 +358,73 @@ def test_run_only_rejects_unknown_figure_names():
     assert proc.returncode == 2
     assert "serving_slo_typo" in proc.stderr
     assert "valid figures" in proc.stderr and "serving_slo" in proc.stderr
+
+
+# ------------------------------- admission-aware replication (mirror census)
+def test_slo_admission_sheds_writes_before_mirror_legs(page_traces_r3):
+    """At overload on a replication=3 cluster, admission='slo' recognizes an
+    infeasible WRITE against the write kind's own latency floor and sheds it
+    BEFORE any of its mirror-lane WQEs are posted: the mirror-WQE census of
+    the slo run must fall below the queue-admission run's, by exactly the
+    per-batch mirror cost of the batches never dispatched."""
+    assert page_traces_r3["meta"]["replication"] == 3
+    assert all(n > 0 for n in page_traces_r3["meta"]["mirror_wqes"].values())
+    base = dict(offered_kops=600, n_clients=4, horizon_s=0.01, share_qp=True,
+                read_frac=0.5, slo_s=200e-6)
+    slo = run_open_loop(page_traces_r3,
+                        OpenLoopConfig(admission="slo", **base), P)
+    queue = run_open_loop(page_traces_r3,
+                          OpenLoopConfig(admission="queue", **base), P)
+    assert slo["shed_by_kind"]["write"] > 0
+    assert slo["write_dispatches"] < queue["write_dispatches"]
+    assert slo["mirror_wqes"] < queue["mirror_wqes"]
+    # census consistency: mirror WQEs are bounded by dispatched write
+    # batches times the largest captured per-batch mirror cost
+    per_b = page_traces_r3["meta"]["mirror_wqes"]
+    for r in (slo, queue):
+        assert r["mirror_wqes"] <= r["write_dispatches"] * max(per_b.values())
+
+
+def test_unreplicated_traces_have_zero_mirror_wqes(page_traces):
+    assert page_traces["meta"]["replication"] == 1
+    assert all(n == 0 for n in page_traces["meta"]["mirror_wqes"].values())
+    r = run_open_loop(page_traces, OpenLoopConfig(
+        offered_kops=300, n_clients=2, horizon_s=0.005, read_frac=0.5), P)
+    assert r["mirror_wqes"] == 0 and r["write_dispatches"] > 0
+
+
+# ------------------------------------------- elastic lanes + migration load
+def test_lane_events_swap_tables_mid_run(page_traces):
+    """A serving run that gains lanes mid-stream via lane_events completes
+    all traffic and reports the swap; determinism holds per (seed, config,
+    events)."""
+    bigger = capture_page_fetch_traces(n_shards=3, batches=(1, 2, 4, 8, 16),
+                                       p=P)
+    cfg = OpenLoopConfig(offered_kops=400, n_clients=4, horizon_s=0.01,
+                         share_qp=True, read_frac=0.9, collect_trace=True)
+    a = run_open_loop(page_traces, cfg, P, lane_events=[(0.005, bigger)])
+    b = run_open_loop(page_traces, cfg, P, lane_events=[(0.005, bigger)])
+    assert a["lane_events"] == 1
+    assert a["completed"] > 0
+    assert event_trace_bytes(a) == event_trace_bytes(b)
+    # the swap actually took: ports for the third shard saw traffic
+    assert len(a["ports"]) == 3
+    assert a["ports"][2]["nic_utilization"] > 0
+
+
+def test_migration_background_traffic_contends(page_traces):
+    """Injected migration doorbells occupy real NIC time: the same serving
+    run with background chains completes them all and shows strictly more
+    NIC busy time on the touched ports."""
+    from repro.serving.load import capture_migration_traces
+    chains = capture_migration_traces(n_shards=2, n_keys=48, p=P)
+    assert chains
+    cfg = OpenLoopConfig(offered_kops=300, n_clients=2, horizon_s=0.01,
+                         read_frac=1.0)
+    quiet = run_open_loop(page_traces, cfg, P)
+    noisy = run_open_loop(page_traces, cfg, P,
+                          background=[(0.002 + i * 1e-5, port, tr)
+                                      for i, (port, tr) in enumerate(chains)])
+    assert noisy["background_chains"]["completed"] == len(chains)
+    busy = lambda r: sum(p["nic_utilization"] for p in r["ports"])
+    assert busy(noisy) > busy(quiet)
